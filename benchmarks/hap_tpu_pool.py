@@ -1,0 +1,49 @@
+"""Beyond-paper: HAP planning for the ASSIGNED architecture pool on the
+TPU v5e target (the paper evaluates GPU nodes only; this applies the same
+ILP to the pod substrate the dry-run proves out).
+
+For each MoE/dense/ssm arch and serving scenario, report the selected
+hybrid strategy and predicted speedup vs static TP on a 16-device slice
+(one v5e tray) — the planner's TPU-native generalization check.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import HAPPlanner, Workload
+from repro.core.latency import cached_latency_model
+
+ARCHS = ("deepseek-moe-16b", "qwen3-moe-30b-a3b", "mixtral-8x7b",
+         "mistral-nemo-12b", "falcon-mamba-7b")
+SCENARIOS = ((4096, 64), (256, 2048))
+
+
+def run(csv_rows):
+    ok = True
+    model = cached_latency_model("tpu_v5e")
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        planner = HAPPlanner(cfg, "tpu_v5e", 16, model=model)
+        for prompt, gen in SCENARIOS:
+            best = (0.0, None)
+            for b in (4, 16, 64):
+                w = Workload(batch=b, prompt=prompt, gen=gen)
+                try:
+                    plan = planner.plan(w)
+                except ValueError:
+                    continue
+                r = planner.evaluate(planner.tp_plan(), w) \
+                    / planner.evaluate(plan, w)
+                if r > best[0]:
+                    best = (r, plan)
+            sp, plan = best
+            if plan is None:
+                csv_rows.append(
+                    f"hap_tpu_{arch}_{prompt}_{gen},0,infeasible")
+                continue
+            desc = plan.describe().replace(" ", ";")
+            csv_rows.append(
+                f"hap_tpu_{arch}_{prompt}_{gen},0,"
+                f"speedup={sp:.3f};{desc}")
+            if sp < 0.95:
+                ok = False
+    return ok

@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (CPU host): jit-dispatch timing of the pure-jnp
+reference paths (what the models execute off-TPU) + interpret-mode parity
+checks for the Pallas TPU kernels. Wall-times on CPU are NOT TPU
+performance — the TPU-side cost model lives in the roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.grouped_matmul import grouped_matmul
+from repro.kernels.int4_dequant import int4_dequant
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 4, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 4, 512, 64), jnp.float32)
+    ref_attn = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    us = _time(ref_attn, q, k, v)
+    csv_rows.append(f"kernel_attention_ref_jnp,{us:.0f},B1H8S512D64")
+    out_p = flash_attention(q, k, v, bq=128, bk=128)
+    err = float(jnp.max(jnp.abs(out_p - ref.flash_attention_ref(q, k, v))))
+    csv_rows.append(f"kernel_attention_pallas_interp,0,max_err={err:.2e}")
+
+    lhs = jax.random.normal(ks[0], (8, 256, 512), jnp.float32)
+    rhs = jax.random.normal(ks[1], (8, 512, 256), jnp.float32)
+    us = _time(jax.jit(ref.grouped_matmul_ref), lhs, rhs)
+    csv_rows.append(f"kernel_gmm_ref_jnp,{us:.0f},E8C256K512F256")
+    out_g = grouped_matmul(lhs, rhs, bc=128, bf=128, bk=256)
+    err = float(jnp.max(jnp.abs(out_g - ref.grouped_matmul_ref(lhs, rhs))))
+    csv_rows.append(f"kernel_gmm_pallas_interp,0,max_err={err:.2e}")
+
+    pk = jax.random.randint(ks[0], (1024, 64), 0, 256,
+                            jnp.int32).astype(jnp.uint8)
+    sc = jax.random.uniform(ks[1], (1024, 1), jnp.float32, 0.01, 0.2)
+    zp = jax.random.uniform(ks[2], (1024, 1), jnp.float32, -1, 1)
+    us = _time(jax.jit(lambda a, b, c: ref.int4_dequant_ref(a, b, c)),
+               pk, sc, zp)
+    csv_rows.append(f"kernel_dequant_ref_jnp,{us:.0f},G1024gs128")
+    out_d = int4_dequant(pk, sc, zp)
+    err = float(jnp.max(jnp.abs(
+        out_d.astype(jnp.float32)
+        - ref.int4_dequant_ref(pk, sc, zp).astype(jnp.float32))))
+    csv_rows.append(f"kernel_dequant_pallas_interp,0,max_err={err:.2e}")
+    return True

@@ -1,0 +1,70 @@
+"""Table I proxy — INT4 quantization scheme fidelity.
+
+Offline (no eval corpora/model weights), we reproduce the table's
+*mechanism*: per-tensor vs per-channel vs per-group INT4 on realistic
+outlier-bearing weight matrices, reporting cosine similarity (paper:
+>99.5%) and relative error, plus end-to-end logit divergence through a
+reduced MoE model served via the INT4 transition path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.quantization import quant_error_stats, quantize_int4, \
+    dequantize_int4
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+    # outlier-bearing weights (heavy-tailed channel scales, like LLM FFNs)
+    # outliers vary by output channel (row) — the axis per-group/
+    # per-channel quantization actually groups along, as in real layouts
+    w = rng.standard_normal((4096, 1408)).astype(np.float32) * 0.02
+    w *= np.exp(rng.standard_normal((4096, 1)) * 1.2)
+
+    stats = {}
+    for scheme in ("per_tensor", "per_channel", "per_group"):
+        t0 = time.perf_counter()
+        s = quant_error_stats(w, scheme, group_size=128)
+        us = (time.perf_counter() - t0) * 1e6
+        stats[scheme] = s
+        csv_rows.append(
+            f"table1_{scheme},{us:.0f},cos={s['cosine']:.6f};"
+            f"rel_mae={s['rel_mae']:.5f};compress={s['compression']:.2f}x")
+
+    ok = (stats["per_group"]["cosine"] > 0.995
+          and stats["per_group"]["rel_mae"]
+          < stats["per_tensor"]["rel_mae"])
+
+    # end-to-end: logit divergence of a reduced MoE model after the INT4
+    # expert round-trip (the transition's numerical cost)
+    from repro.models import init_params, make_batch
+    from repro.models.transformer import embed_inputs, forward_hidden, \
+        unembed
+    cfg = dataclasses.replace(get_config("deepseek-moe-16b").reduced(),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 32, 2, with_labels=False)
+    x = embed_inputs(params, cfg, batch, None)
+    h, _, _ = forward_hidden(params, cfg, x, None)
+    logits = unembed(params, cfg, h[:, -1:, :])
+
+    moe = dict(params["layers"]["moe"])
+    for k in ("wi_gate", "wi_up", "wo"):
+        qt = quantize_int4(np.asarray(moe[k], np.float32), "per_group", 128)
+        moe[k] = dequantize_int4(qt, np.float32)
+    params_q = dict(params, layers=dict(params["layers"], moe=moe))
+    xq = embed_inputs(params_q, cfg, batch, None)
+    hq, _, _ = forward_hidden(params_q, cfg, xq, None)
+    logits_q = unembed(params_q, cfg, hq[:, -1:, :])
+    div = float(np.max(np.abs(np.asarray(logits) - np.asarray(logits_q))))
+    agree = float(np.mean(np.argmax(np.asarray(logits), -1)
+                          == np.argmax(np.asarray(logits_q), -1)))
+    csv_rows.append(f"table1_e2e_logit_divergence,0,max_abs={div:.4f};"
+                    f"greedy_agree={agree:.3f}")
+    return ok and agree >= 0.5

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and a PASS/FAIL summary of
+the paper-claim checks. Usage: ``PYTHONPATH=src python -m benchmarks.run``
+(optionally ``--only fig5,table1``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark keys")
+    args = ap.parse_args()
+
+    from . import (breakdown, hap_tpu_pool, ilp_time, kernel_bench,
+                   quant_quality, scenario_speedup, sim_accuracy)
+    suites = {
+        "fig5_sim_accuracy": sim_accuracy.run,
+        "fig2_fig8c_breakdown": breakdown.run,
+        "fig4_6_7_9_scenarios": scenario_speedup.run,
+        "table1_quantization": quant_quality.run,
+        "ilp_time": ilp_time.run,
+        "kernels": kernel_bench.run,
+        "hap_tpu_pool": hap_tpu_pool.run,
+    }
+    only = {s for s in args.only.split(",") if s}
+    rows: list = ["name,us_per_call,derived"]
+    results = {}
+    for name, fn in suites.items():
+        if only and not any(o in name for o in only):
+            continue
+        t0 = time.time()
+        try:
+            ok = fn(rows)
+        except Exception as e:  # noqa: BLE001
+            rows.append(f"{name}_ERROR,0,{type(e).__name__}:{e}")
+            ok = False
+        results[name] = ok
+        rows.append(f"{name}_suite,{(time.time()-t0)*1e6:.0f},pass={ok}")
+    print("\n".join(rows))
+    print("\n== paper-claim checks ==")
+    for name, ok in results.items():
+        print(f"  {'PASS' if ok else 'FAIL'}  {name}")
+    if not all(results.values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

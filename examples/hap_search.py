@@ -1,0 +1,50 @@
+"""Reproduce the paper's strategy-selection table: what HAP picks per
+(model x platform x scenario), with predicted speedups over static TP.
+
+Run:  PYTHONPATH=src python examples/hap_search.py [--chips a6000,a100]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core import HAPPlanner, Workload
+from repro.core.latency import cached_latency_model
+
+SCENARIOS = [(256, 64), (256, 2048), (4096, 64), (4096, 2048)]
+MODELS = ("mixtral-8x7b", "qwen1.5-moe-a2.7b", "qwen2-57b-a14b")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chips", default="a6000,a100")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--batches", default="1,4,16")
+    args = ap.parse_args()
+    batches = [int(b) for b in args.batches.split(",")]
+
+    print(f"{'model':20s} {'chip':7s} {'scenario':12s} {'best plan':46s} "
+          f"{'speedup':8s}")
+    for model in MODELS:
+        cfg = get_config(model)
+        for chip in args.chips.split(","):
+            planner = HAPPlanner(cfg, chip, args.devices,
+                                 model=cached_latency_model(chip))
+            for prompt, gen in SCENARIOS:
+                best = (0.0, None)
+                for b in batches:
+                    w = Workload(batch=b, prompt=prompt, gen=gen)
+                    try:
+                        plan = planner.plan(w)
+                    except ValueError:
+                        continue
+                    r = planner.evaluate(planner.tp_plan(), w) \
+                        / planner.evaluate(plan, w)
+                    if r > best[0]:
+                        best = (r, plan)
+                sp, plan = best
+                desc = plan.describe() if plan else "infeasible"
+                print(f"{model:20s} {chip:7s} {prompt:5d}/{gen:<6d} "
+                      f"{desc:46s} {sp:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Quickstart: build a tiny model from the zoo, train a few steps on the
+synthetic pipeline, then serve a few generations through the engine.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.data import synthetic_lm_data
+from repro.models import init_params
+from repro.serving import InferenceEngine, Request
+from repro.training.train_loop import init_train_state, train_loop
+
+
+def main():
+    # a reduced deepseek-style MoE: 2 layers, 4 experts top-2
+    cfg = dataclasses.replace(get_config("deepseek-moe-16b").reduced(),
+                              dtype="float32")
+    print(f"model: {cfg.name}  params={cfg.total_params()/1e6:.1f}M "
+          f"(active {cfg.active_params_per_token()/1e6:.1f}M)")
+
+    data = synthetic_lm_data(cfg, batch=8, seq=64, seed=0)
+    state = train_loop(cfg, data, steps=30, log_every=10)
+
+    engine = InferenceEngine(cfg, state.params, max_batch=4)
+    for prompt in ([1, 2, 3, 4, 5], [42, 7, 99], [10, 20, 30, 40]):
+        engine.submit(Request(prompt=prompt, max_new_tokens=12))
+    for comp in engine.run():
+        print(f"request {comp.uid}: {comp.tokens} "
+              f"(prefill {comp.prefill_ms:.1f}ms, "
+              f"decode {comp.decode_ms:.1f}ms)")
+
+
+if __name__ == "__main__":
+    main()

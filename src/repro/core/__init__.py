@@ -1,0 +1,11 @@
+"""HAP core — the paper's contribution: module-decomposed latency
+simulation, strategy search space, ILP selection, dynamic transition."""
+from .flops import Workload  # noqa: F401
+from .hap import HAPPlan, HAPPlanner  # noqa: F401
+from .hardware import CHIPS, ChipSpec, GroundTruth, get_chip  # noqa: F401
+from .ilp import HapIlp, OneHotIlp  # noqa: F401
+from .latency import InferenceSimulator, LatencyModel  # noqa: F401
+from .strategy import (AttnStrategy, ExpertStrategy,  # noqa: F401
+                       attention_strategies, expert_strategies)
+from .transition import (TransitionExecutor, transition_costs,  # noqa: F401
+                         switching_matrix)

@@ -1,0 +1,91 @@
+"""INT4 weight quantization for the dynamic parallelism transition
+(paper §III-D, Table I).
+
+Schemes: per-tensor, per-channel, per-group (the paper adopts fine-grained
+per-group after observing per-tensor degrades GSM8K). Asymmetric 4-bit:
+q = round((w - zero) / scale) in [0, 15]; dequant w_hat = scale * q + zero.
+Packing: two nibbles per uint8, low nibble first — the exact layout the
+Pallas ``int4_dequant`` kernel consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    packed: np.ndarray     # (G, gs // 2) uint8
+    scales: np.ndarray     # (G, 1) float32
+    zeros: np.ndarray      # (G, 1) float32
+    shape: Tuple[int, ...]  # original shape
+    group_size: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.nbytes + self.scales.nbytes + self.zeros.nbytes
+
+
+def _group_reshape(w: np.ndarray, scheme: str, group_size: int):
+    flat = w.reshape(-1)
+    if scheme == "per_tensor":
+        gs = flat.size
+    elif scheme == "per_channel":
+        gs = w.shape[-1]
+    elif scheme == "per_group":
+        gs = group_size
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    if flat.size % gs:
+        raise ValueError(f"size {flat.size} not divisible by group {gs}")
+    if gs % 2:
+        raise ValueError("group size must be even for nibble packing")
+    return flat.reshape(-1, gs), gs
+
+
+def quantize_int4(w: np.ndarray, scheme: str = "per_group",
+                  group_size: int = 128) -> QuantizedTensor:
+    orig_shape = w.shape
+    grouped, gs = _group_reshape(np.asarray(w, np.float32), scheme,
+                                 group_size)
+    lo = grouped.min(axis=1, keepdims=True)
+    hi = grouped.max(axis=1, keepdims=True)
+    scale = np.maximum((hi - lo) / 15.0, 1e-8).astype(np.float32)
+    zero = lo.astype(np.float32)
+    q = np.clip(np.round((grouped - zero) / scale), 0, 15).astype(np.uint8)
+    low = q[:, 0::2]
+    high = q[:, 1::2]
+    packed = (low | (high << 4)).astype(np.uint8)
+    return QuantizedTensor(packed=packed, scales=scale, zeros=zero,
+                           shape=tuple(orig_shape), group_size=gs)
+
+
+def dequantize_int4(qt: QuantizedTensor, dtype=np.float32) -> np.ndarray:
+    low = (qt.packed & 0xF).astype(np.float32)
+    high = (qt.packed >> 4).astype(np.float32)
+    vals = np.stack([low, high], axis=-1).reshape(qt.packed.shape[0], -1)
+    out = vals * qt.scales + qt.zeros
+    return out.reshape(qt.shape).astype(dtype)
+
+
+def cosine_similarity(a: np.ndarray, b: np.ndarray) -> float:
+    a = a.reshape(-1).astype(np.float64)
+    b = b.reshape(-1).astype(np.float64)
+    return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-30))
+
+
+def quant_error_stats(w: np.ndarray, scheme: str,
+                      group_size: int = 128) -> dict:
+    qt = quantize_int4(w, scheme, group_size)
+    wh = dequantize_int4(qt)
+    err = np.abs(wh - w)
+    denom = np.abs(w).mean() + 1e-30
+    return {
+        "scheme": scheme,
+        "cosine": cosine_similarity(w, wh),
+        "rel_mae": float(err.mean() / denom),
+        "max_abs": float(err.max()),
+        "compression": w.size * 2 / qt.nbytes,   # vs bf16
+    }

@@ -1,0 +1,134 @@
+"""Dynamic parallelism transition (paper §III-D, Eq. 6).
+
+Switching the Expert module's layout between prefill and decode costs
+
+  C_ij = min{ T_reshard,
+              max(0, T_upload + T_dequant - T_layer_overlap) }
+
+where T_reshard moves weights between devices with collectives, and the
+alternative uploads an INT4 per-group backup from host memory (pipelined
+against prefill compute — hence the max(0, .) overlap term) and dequantizes
+on-device (the Pallas ``int4_dequant`` kernel).
+
+``TransitionExecutor`` actually performs both mechanisms on JAX arrays so
+the serving engine can switch strategies mid-request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .flops import Workload, expert_weight_bytes
+from .hardware import ChipSpec, GroundTruth
+from .strategy import ExpertStrategy
+
+INT4_BYTES_PER_PARAM = 0.5 + 8.0 / 128.0   # nibbles + per-group scale/zero
+
+
+@dataclasses.dataclass
+class TransitionCosts:
+    t_reshard: float
+    t_upload: float
+    t_dequant: float
+    t_overlap: float
+
+    @property
+    def c_ij(self) -> float:
+        via_host = max(0.0, self.t_upload + self.t_dequant - self.t_overlap)
+        return min(self.t_reshard, via_host)
+
+    @property
+    def mechanism(self) -> str:
+        via_host = max(0.0, self.t_upload + self.t_dequant - self.t_overlap)
+        return "reshard" if self.t_reshard <= via_host else "int4_upload"
+
+
+def layout_overlap(e_from: ExpertStrategy, e_to: ExpertStrategy) -> float:
+    """Fraction of the target per-device shard already resident locally.
+
+    Both layouts are partitions of the same (E, d, f) weights over N
+    devices; a device keeps the intersection of its old and new shards.
+    For EP<->TP style moves the intersection is ~1/max(spread) of the new
+    shard.
+    """
+    if e_from == e_to:
+        return 1.0
+    spread = max(e_from.ep * e_from.tp // max(
+        np.gcd(e_from.ep, e_to.ep) * np.gcd(e_from.tp, e_to.tp), 1), 1)
+    return 1.0 / spread
+
+
+def transition_costs(cfg: ModelConfig, w: Workload, chip: ChipSpec,
+                     n_devices: int, e_from: ExpertStrategy,
+                     e_to: ExpertStrategy, t_layer_prefill: float,
+                     gt: Optional[GroundTruth] = None) -> TransitionCosts:
+    """All Eq.-6 terms for one layer's expert weights."""
+    gt = gt or GroundTruth(chip)
+    if e_from == e_to:
+        return TransitionCosts(0.0, 0.0, 0.0, t_layer_prefill)
+    wb = expert_weight_bytes(cfg, w.dtype_bytes)       # one layer, global
+    shard = wb / n_devices
+    missing = shard * (1.0 - layout_overlap(e_from, e_to))
+    t_reshard = gt.comm_time(missing, hops=2, noisy=False)
+    n_params_shard = (wb / w.dtype_bytes) / n_devices
+    t_upload = gt.h2d_time(n_params_shard * INT4_BYTES_PER_PARAM)
+    t_dequant = gt.dequant_time(n_params_shard)
+    return TransitionCosts(t_reshard, t_upload, t_dequant, t_layer_prefill)
+
+
+def switching_matrix(cfg: ModelConfig, w: Workload, chip: ChipSpec,
+                     n_devices: int, strategies, t_layer_prefill,
+                     gt: Optional[GroundTruth] = None) -> np.ndarray:
+    """The paper's C matrix: C[i, j] = per-MODEL switching cost i -> j.
+
+    t_layer_prefill may be a vector (per prefill strategy i) — the overlap
+    window is the prefill compute of the layer being replaced.
+    """
+    K = len(strategies)
+    C = np.zeros((K, K))
+    t_vec = np.broadcast_to(np.asarray(t_layer_prefill, float), (K,))
+    for i, ei in enumerate(strategies):
+        for j, ej in enumerate(strategies):
+            if i == j:
+                continue
+            tc = transition_costs(cfg, w, chip, n_devices, ei, ej,
+                                  float(t_vec[i]), gt)
+            C[i, j] = tc.c_ij * cfg.num_layers
+    return C
+
+
+# ---------------------------------------------------------------------------
+# executable transition on real JAX arrays (serving engine)
+# ---------------------------------------------------------------------------
+class TransitionExecutor:
+    """Keeps INT4 per-group host backups of expert weights and materializes
+    them under a new sharding, or reshards device arrays directly."""
+
+    def __init__(self, group_size: int = 128):
+        from . import quantization as q
+        self._q = q
+        self.group_size = group_size
+        self._backups: Dict[str, object] = {}
+
+    def backup(self, name: str, w) -> None:
+        import numpy as np
+        self._backups[name] = self._q.quantize_int4(
+            np.asarray(w, np.float32), "per_group", self.group_size)
+
+    def restore(self, name: str, sharding=None, dtype=None):
+        import jax
+        import jax.numpy as jnp
+        qt = self._backups[name]
+        host = self._q.dequantize_int4(qt)
+        arr = jnp.asarray(host, dtype=dtype or jnp.bfloat16)
+        if sharding is not None:
+            arr = jax.device_put(arr, sharding)
+        return arr
+
+    @staticmethod
+    def reshard(w, sharding):
+        import jax
+        return jax.device_put(w, sharding)

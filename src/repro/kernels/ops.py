@@ -1,0 +1,55 @@
+"""Jitted dispatch wrappers over the Pallas kernels.
+
+On the CPU dev container the kernels run in interpret mode (kernel body
+executed in Python) purely for validation; ``use_pallas=False`` falls back
+to the pure-jnp reference implementations, which XLA fuses well and which
+the models use by default off-TPU. On real TPU hardware set
+``interpret=False`` (the default flips automatically when a TPU backend is
+detected).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .grouped_matmul import grouped_matmul as _gmm_pallas
+from .int4_dequant import int4_dequant as _dequant_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, scale: Optional[float] = None,
+              use_pallas: bool = False) -> jax.Array:
+    """(B, Hq, Sq, hd) x (B, Hkv, Sk, hd)^2 -> (B, Hq, Sq, hd)."""
+    if use_pallas:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale,
+                             interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+
+
+def grouped_matmul(lhs, rhs, *, use_pallas: bool = False) -> jax.Array:
+    """(E, C, d) x (E, d, f) -> (E, C, f)."""
+    if use_pallas:
+        return _gmm_pallas(lhs, rhs, interpret=not _on_tpu())
+    return ref.grouped_matmul_ref(lhs, rhs)
+
+
+def int4_dequant(packed, scales, zeros, *, out_dtype=jnp.bfloat16,
+                 use_pallas: bool = False) -> jax.Array:
+    """(G, gs/2) uint8 -> (G, gs) out_dtype."""
+    if use_pallas:
+        return _dequant_pallas(packed, scales, zeros, out_dtype=out_dtype,
+                               interpret=not _on_tpu())
+    return ref.int4_dequant_ref(packed, scales, zeros, out_dtype=out_dtype)

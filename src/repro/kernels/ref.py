@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's exact contract; the kernel tests sweep
+shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, scale: Optional[float] = None,
+                        kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Naive attention. q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd).
+
+    GQA: q heads grouped over kv heads (Hq % Hkv == 0). ``window`` > 0
+    restricts to a sliding window; ``kv_len`` masks positions >= kv_len
+    (decode). Query positions are aligned to the END of the kv sequence
+    when Sq != Sk (decode semantics: q_pos = Sk - Sq + i, or kv_len - Sq + i
+    when kv_len is given).
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = hd ** -0.5
+    qf = q.reshape(B, Hkv, G, Sq, hd).astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qf,
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = softcap_ref(logits, softcap)
+    kpos = jnp.arange(Sk)
+    if kv_len is not None:
+        qpos = kv_len - Sq + jnp.arange(Sq)
+    else:
+        qpos = Sk - Sq + jnp.arange(Sq)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            ok &= (qpos[:, None] - kpos[None, :]) < window
+    if kv_len is not None:
+        ok &= kpos[None, :] < kv_len
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+def softcap_ref(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+def grouped_matmul_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+    """(E, C, d) x (E, d, f) -> (E, C, f), f32 accumulation."""
+    out = jnp.einsum("ecd,edf->ecf", lhs.astype(jnp.float32),
+                     rhs.astype(jnp.float32))
+    return out.astype(lhs.dtype)
+
+
+def int4_dequant_ref(packed: jax.Array, scales: jax.Array,
+                     zeros: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """Unpack + dequantize per-group INT4.
+
+    packed: (G, gs // 2) uint8, two nibbles per byte (low nibble first).
+    scales/zeros: (G, 1) float32. Output: (G, gs) = scales * q + zeros.
+    """
+    low = (packed & 0xF).astype(jnp.float32)
+    high = (packed >> 4).astype(jnp.float32)
+    vals = jnp.stack([low, high], axis=-1).reshape(packed.shape[0], -1)
+    return (vals * scales + zeros).astype(out_dtype)

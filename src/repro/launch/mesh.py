@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state. The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading
+    "pod" axis (the slow/DCN axis)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 2):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    data_axis = n // model_axis
+    return jax.make_mesh((data_axis, model_axis), ("data", "model"))

@@ -1,0 +1,241 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Calibrated
+semantics (verified empirically in this repo): for SPMD-partitioned
+programs the numbers are PER-DEVICE, and each unique computation — e.g. a
+lax.scan body, even when unrolled into N calls — is counted ONCE. The
+dry-run therefore compiles the layer body standalone (launch/probes.py)
+and combines: total = c_full + (num_layers - 1) * c_body.
+
+Collective bytes are NOT in cost_analysis: we parse the partitioned HLO
+text, take each collective's per-device result shape and its
+replica_groups size g, and apply ring wire factors.
+
+CPU-emulation correction: the XLA CPU backend upcasts ALL bf16 compute to
+f32 (converts at entry, f32 dots/collectives, convert back) — verified
+empirically. On the TPU target those collectives stay bf16, so for bf16
+programs every f32 collective payload is counted at half size
+(``f32_as_bf16=True``). Genuinely-f32 tensors (mamba states, loss scalars)
+are a rounding error at these scales.
+
+Ring wire factors:
+  all-gather      result * (g-1)/g
+  all-reduce      2 * result * (g-1)/g
+  reduce-scatter  result * (g-1)          (operand = result * g)
+  all-to-all      result * (g-1)/g
+  collective-permute  result
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))       # [num_groups, group_size]
+    return 2
+
+
+def collective_bytes(hlo_text: str,
+                     f32_as_bf16: bool = True) -> Dict[str, float]:
+    """Per-device wire bytes per collective kind, ring-algorithm model."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        res = _shape_bytes(shape_str)
+        if f32_as_bf16 and "f32[" in shape_str:
+            # halve only the f32 components of (possibly tuple) shapes
+            f32_bytes = 0.0
+            for dt, dims in _SHAPE_RE.findall(shape_str):
+                if dt != "f32":
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                f32_bytes += n * 4
+            res -= f32_bytes / 2.0
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            wire = res * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2.0 * res * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = res * (g - 1)
+        elif kind == "all-to-all":
+            wire = res * (g - 1) / g
+        else:  # collective-permute
+            wire = res
+        out[kind] += wire
+    return out
+
+
+@dataclasses.dataclass
+class Costs:
+    """Raw extracted costs for one compiled program."""
+    flops: float                      # global logical FLOPs
+    bytes_accessed: float             # global logical bytes
+    coll: Dict[str, float]           # per-device wire bytes by kind
+
+    def __sub__(self, o: "Costs") -> "Costs":
+        return Costs(self.flops - o.flops,
+                     self.bytes_accessed - o.bytes_accessed,
+                     {k: self.coll.get(k, 0.0) - o.coll.get(k, 0.0)
+                      for k in _COLLECTIVES})
+
+    def __add__(self, o: "Costs") -> "Costs":
+        return Costs(self.flops + o.flops,
+                     self.bytes_accessed + o.bytes_accessed,
+                     {k: self.coll.get(k, 0.0) + o.coll.get(k, 0.0)
+                      for k in _COLLECTIVES})
+
+    def scale(self, a: float) -> "Costs":
+        return Costs(self.flops * a, self.bytes_accessed * a,
+                     {k: v * a for k, v in self.coll.items()})
+
+    def clamp(self) -> "Costs":
+        return Costs(max(self.flops, 0.0), max(self.bytes_accessed, 0.0),
+                     {k: max(v, 0.0) for k, v in self.coll.items()})
+
+
+def extract_costs(compiled) -> Costs:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return Costs(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        coll=collective_bytes(compiled.as_text()),
+    )
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float            # PER-DEVICE FLOPs (scan-corrected)
+    hlo_bytes: float            # PER-DEVICE bytes (scan-corrected)
+    coll_bytes: float           # per-device wire bytes
+    coll_breakdown: Dict[str, float]
+    model_flops: float          # 6*N_active*D (training) / 2*N_active*D
+    peak_mem_bytes: float       # per-device from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * N) — fraction of compiled compute
+        that is 'useful'; catches remat/dispatch/causal-square waste."""
+        total = self.hlo_flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},"
+                f"{self.t_compute*1e3:.3f},{self.t_memory*1e3:.3f},"
+                f"{self.t_collective*1e3:.3f},{self.bottleneck},"
+                f"{self.flops_ratio:.3f},{self.peak_mem_bytes/2**30:.2f}")
+
+
+def model_flops_for(cfg, shape_name: str) -> float:
+    """6*N_active*D (train: fwd 2ND + bwd 4ND) or 2*N_active*D (inference)."""
+    from repro.models.io import INPUT_SHAPES
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_params_per_token()
+    if kind == "train":
+        return 6.0 * n_active * seq * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq * batch
+    return 2.0 * n_active * batch
+
+
+def peak_memory(compiled) -> float:
+    mem = compiled.memory_analysis()
+    return float(getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0)
+                 - getattr(mem, "alias_size_in_bytes", 0))
+
+
+def build_report(*, arch: str, shape: str, mesh_name: str, n_devices: int,
+                 cfg, full: Costs, layer_body: Optional[Costs],
+                 peak_mem: float) -> RooflineReport:
+    total = full
+    if layer_body is not None and cfg.num_layers > 1:
+        total = (full + layer_body.clamp().scale(cfg.num_layers - 1))
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=total.flops, hlo_bytes=total.bytes_accessed,
+        coll_bytes=sum(total.coll.values()), coll_breakdown=total.coll,
+        model_flops=model_flops_for(cfg, shape),
+        peak_mem_bytes=peak_mem)

@@ -1,0 +1,54 @@
+"""Training launcher.
+
+Local (CPU/dev): runs real steps on a reduced config.
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-7b --steps 20
+
+Production mesh: build the sharded train step exactly as the dry-run does
+(16x16 or 2x16x16); on real TPU hardware the same code path trains the
+full configuration (here, without --reduced, it requires TPU devices).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data import synthetic_lm_data
+from repro.sharding.specs import make_plan
+from repro.training.train_loop import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (requires a real accelerator mesh)")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        import dataclasses
+        cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
+    n = len(jax.devices())
+    plan = None
+    if n > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+        plan = make_plan(mesh, cfg)
+        print(f"mesh {dict(mesh.shape)} plan: attn={plan.attn_mode} "
+              f"ffn={plan.ffn_mode}")
+    print(f"{cfg.name}: {cfg.total_params()/1e6:.1f}M params, "
+          f"{n} device(s)")
+    data = synthetic_lm_data(cfg, args.batch, args.seq)
+    train_loop(cfg, data, steps=args.steps, plan=plan, log_every=5,
+               checkpoint_dir=args.ckpt or None,
+               checkpoint_every=args.steps if args.ckpt else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Attention: GQA with RoPE, sliding-window / global masks, logit
+softcapping, chunked (flash-style) prefill and single-token decode.
+
+Memory discipline: full (S, S) score tensors are never materialized for
+long sequences — the prefill path scans over query chunks with an online
+softmax over KV chunks (pure-jnp flash; the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU-target version of the same
+algorithm and is validated against ``repro.kernels.ref``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import apply_rope, softcap
+
+NEG_INF = -2.0e38  # f32-safe mask value
+
+
+class AttnTemps(NamedTuple):
+    """Per-layer attention weights, already unstacked (no leading L)."""
+    wq: jax.Array
+    wk: jax.Array
+    wv: jax.Array
+    wo: jax.Array
+
+
+def _scale(cfg: ModelConfig) -> float:
+    if cfg.query_pre_attn_scalar > 0:
+        return cfg.query_pre_attn_scalar ** -0.5
+    return cfg.head_dim ** -0.5
+
+
+def qkv_project(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
+                positions: jax.Array):
+    """x: (B, S, d) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd), rope applied."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,de->bse", x, w.wq).reshape(
+        B, S, cfg.num_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,de->bse", x, w.wk).reshape(
+        B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,de->bse", x, w.wv).reshape(
+        B, S, cfg.num_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, cfg: ModelConfig,
+               is_global, kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Additive mask bias of shape (Sq, Sk) in f32.
+
+    - causal models: k_pos <= q_pos
+    - sliding window (when ``is_global`` is False): q_pos - k_pos < window
+    - encoder-only (cfg.causal False): full bidirectional
+    - kv_len: valid-length bound for decode (k_pos < kv_len)
+    """
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if cfg.causal:
+        ok = k_pos[None, :] <= q_pos[:, None]
+        if cfg.sliding_window > 0:
+            in_win = (q_pos[:, None] - k_pos[None, :]) < cfg.sliding_window
+            win_ok = ok & in_win
+            ok = jnp.where(is_global, ok, win_ok)
+    if kv_len is not None:
+        ok = ok & (k_pos[None, :] < kv_len)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa_chunk(q, k, v, bias, cfg: ModelConfig):
+    """q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd), bias (Sq,Sk) -> (out, row_max, row_sum).
+
+    GQA: q heads grouped over kv heads. Returns unnormalized output plus the
+    online-softmax statistics so callers can combine across KV chunks.
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * _scale(cfg)
+    if cfg.attn_logit_softcap > 0:
+        logits = softcap(logits, cfg.attn_logit_softcap)
+    logits = logits + bias[None, None, None, :, :]
+    m = jnp.max(logits, axis=-1)                      # (B,Hkv,G,Sq)
+    p = jnp.exp(logits - m[..., None])
+    s = jnp.sum(p, axis=-1)                           # (B,Hkv,G,Sq)
+    # probabilities in the value dtype for the AV matmul: halves the
+    # dominant HBM tile traffic of long-sequence prefill (p in [0,1] is
+    # safe in bf16; the normalizer s stays f32). See EXPERIMENTS §Perf.
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m, s
+
+
+def full_attention(q, k, v, cfg: ModelConfig, is_global,
+                   q_positions: jax.Array, k_positions: jax.Array,
+                   kv_len: Optional[jax.Array] = None,
+                   kv_chunk: int = 1024) -> jax.Array:
+    """Flash-style attention scanning over KV chunks (online softmax).
+
+    Shapes: q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd). Returns (B,Sq,Hq,hd).
+    Memory: O(Sq * kv_chunk) score tiles instead of O(Sq * Sk).
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if Sk <= kv_chunk:
+        bias = _mask_bias(q_positions, k_positions, cfg, is_global, kv_len)
+        o, m, s = _sdpa_chunk(q, k, v, bias, cfg)
+        out = o / jnp.maximum(s[..., None], 1e-30)
+        return out.reshape(B, Hkv, G, Sq, hd).transpose(0, 3, 1, 2, 4) \
+                  .reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+    n_chunks = Sk // kv_chunk
+    assert Sk % kv_chunk == 0, "kv length must be divisible by kv_chunk"
+    ks = k.reshape(B, n_chunks, kv_chunk, Hkv, hd)
+    vs = v.reshape(B, n_chunks, kv_chunk, Hkv, hd)
+    kpos = k_positions.reshape(n_chunks, kv_chunk)
+
+    def step(carry, xs):
+        o_acc, m_acc, s_acc = carry
+        kc, vc, kp = xs
+        bias = _mask_bias(q_positions, kp, cfg, is_global, kv_len)
+        o, m, s = _sdpa_chunk(q, kc, vc, bias, cfg)
+        m_new = jnp.maximum(m_acc, m)
+        alpha = jnp.exp(m_acc - m_new)
+        beta = jnp.exp(m - m_new)
+        o_acc = o_acc * alpha[..., None] + o * beta[..., None]
+        s_acc = s_acc * alpha + s * beta
+        return (o_acc, m_acc * 0 + m_new, s_acc), None
+
+    o0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    (o, _, s), _ = jax.lax.scan(
+        step, (o0, m0, s0),
+        (ks.transpose(1, 0, 2, 3, 4), vs.transpose(1, 0, 2, 3, 4), kpos))
+    out = o / jnp.maximum(s[..., None], 1e-30)
+    return out.reshape(B, Hkv, G, Sq, hd).transpose(0, 3, 1, 2, 4) \
+              .reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def _maybe_repeat_kv(k, v, cfg: ModelConfig, plan):
+    """When q heads shard over TP but kv heads don't divide the axis,
+    replicate kv heads up to the q head count (G=1) so the GQA grouping
+    reshape never splits a sharded head dim (vLLM-style kv replication)."""
+    if plan is None or plan.is_null or plan.attn_mode != "tp_heads":
+        return k, v, False
+    tp = plan.axis_size(plan.attn_tp_axis)
+    if cfg.num_kv_heads % tp == 0 or cfg.num_heads % tp != 0:
+        return k, v, False
+    g = cfg.num_heads // cfg.num_kv_heads
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    return k, v, True
+
+
+def attention_block(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
+                    is_global, plan, q_chunk: int = 512,
+                    return_kv: bool = False):
+    """Full-sequence attention (training / prefill): (B,S,d) -> (B,S,d).
+
+    ``return_kv=True`` also returns the (pre-replication, rope'd) K/V so
+    prefill can seed the decode cache without re-projecting them.
+    """
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = qkv_project(x, w, cfg, positions[None, :])
+    kv_out = (k, v) if return_kv else None
+    k, v, repeated = _maybe_repeat_kv(k, v, cfg, plan)
+    if plan is not None and not plan.is_null:
+        heads_sharded = plan.attn_mode == "tp_heads"
+        q = plan.constrain(q, plan.act_bthd(heads_sharded))
+        kv_ok = heads_sharded and (repeated or cfg.num_kv_heads % plan.axis_size(
+            plan.attn_tp_axis) == 0)
+        k = plan.constrain(k, plan.act_bthd(kv_ok))
+        v = plan.constrain(v, plan.act_bthd(kv_ok))
+
+    if S > q_chunk and S % q_chunk == 0:
+        nq = S // q_chunk
+        qs = q.reshape(B, nq, q_chunk, cfg.num_heads, cfg.head_dim)
+
+        def one_q_chunk(i):
+            qp = jax.lax.dynamic_slice(positions, (i * q_chunk,), (q_chunk,))
+            return full_attention(qs[:, i], k, v, cfg, is_global,
+                                  qp, positions)
+        out = jax.lax.map(one_q_chunk, jnp.arange(nq))      # (nq,B,qc,H,hd)
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.num_heads,
+                                                   cfg.head_dim)
+    else:
+        out = full_attention(q, k, v, cfg, is_global, positions, positions)
+    o = jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1).astype(x.dtype),
+                   w.wo, preferred_element_type=x.dtype)
+    if return_kv:
+        return o, kv_out
+    return o
+
+
+def prefill_kv(x: jax.Array, w: AttnTemps, cfg: ModelConfig):
+    """Compute the K/V tensors to seed a decode cache: (B,S,Hkv,hd) pair."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    _, k, v = qkv_project(x, w, cfg, positions)
+    return k, v
+
+
+def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
+                     is_global, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, plan) -> tuple:
+    """One-token decode. x: (B, 1, d); caches (B, Smax, Hkv, hd); pos scalar.
+
+    Returns (out (B,1,d), new_k_cache, new_v_cache). The new token's K/V are
+    written at ``pos``; attention runs over the full cache with a validity
+    mask (k_pos <= pos), which under a sequence-sharded cache lowers to
+    partial softmax + all-reduce (flash-decoding analog).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = qkv_project(x, w, cfg, pos[None, None]
+                                  if pos.ndim == 0 else pos[:, None])
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    if plan is not None and not plan.is_null:
+        k_cache = plan.constrain(k_cache, plan.cache_spec_bshd())
+        v_cache = plan.constrain(v_cache, plan.cache_spec_bshd())
+
+    Smax = k_cache.shape[1]
+    k_positions = jnp.arange(Smax, dtype=jnp.int32)
+    q_positions = jnp.full((1,), 0, jnp.int32) + pos
+    out = full_attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                         cfg, is_global, q_positions, k_positions,
+                         kv_len=pos + 1, kv_chunk=max(Smax, 1))
+    o = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, -1).astype(x.dtype),
+                   w.wo, preferred_element_type=x.dtype)
+    return o, k_cache, v_cache
+

@@ -1,0 +1,140 @@
+"""Input specifications and synthetic batch construction.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — used by the multi-pod
+dry-run. ``make_batch`` materializes the same structure with random data
+for smoke tests / examples.
+
+Modality carve-out (per the brief): audio/VLM frontends are stubs — the
+specs provide precomputed frame/patch embeddings of the right shape; the
+transformer backbone consumes them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .transformer import DecodeCache
+
+
+# The four assigned input shapes (seq_len, global_batch, kind).
+INPUT_SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k":    (4_096,   256, "train"),
+    "prefill_32k": (32_768,  32,  "prefill"),
+    "decode_32k":  (32_768,  128, "decode"),
+    "long_500k":   (524_288, 1,   "decode"),
+}
+
+
+def _token_specs(cfg: ModelConfig, seq: int, batch: int, with_labels: bool):
+    i32 = jnp.int32
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        specs["features"] = jax.ShapeDtypeStruct(
+            (batch, seq, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+        if with_labels:
+            specs["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    elif cfg.frontend == "vision":
+        n_text = max(seq - cfg.num_patches, 16)
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, n_text), i32)
+        if with_labels:
+            specs["labels"] = jax.ShapeDtypeStruct((batch, n_text), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        if with_labels:
+            specs["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> DecodeCache:
+    dt = jnp.dtype(cfg.dtype)
+    kv_dt = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else dt
+    L = cfg.num_layers
+    k = v = conv = ssm = None
+    if cfg.has_attention:
+        shape = (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        k = jax.ShapeDtypeStruct(shape, kv_dt)
+        v = jax.ShapeDtypeStruct(shape, kv_dt)
+    if cfg.has_mamba:
+        conv = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), dt)
+        ssm = jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32)
+    return DecodeCache(k=k, v=v, conv=conv, ssm=ssm,
+                       pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch x input-shape) dry-run combination.
+
+    train:   {"batch": {tokens, labels, ...}}
+    prefill: {"batch": {tokens, ...}}
+    decode:  {"token": (B, 1), "cache": DecodeCache at seq_len}
+    """
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    if kind == "train":
+        return {"batch": _token_specs(cfg, seq, batch, with_labels=True)}
+    if kind == "prefill":
+        return {"batch": _token_specs(cfg, seq, batch, with_labels=False)}
+    # decode: one new token against a seq_len-sized cache
+    return {
+        "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "cache": cache_specs(cfg, batch, seq),
+    }
+
+
+def supported_shapes(cfg: ModelConfig) -> Dict[str, str]:
+    """shape_name -> "ok" or a skip reason (recorded in EXPERIMENTS.md)."""
+    out: Dict[str, str] = {}
+    for name, (seq, batch, kind) in INPUT_SHAPES.items():
+        if kind == "decode":
+            if cfg.is_encoder_only:
+                out[name] = "SKIP: encoder-only (no decode step)"
+                continue
+            if name == "long_500k":
+                subquad = (cfg.has_mamba
+                           or (cfg.sliding_window > 0 and cfg.layer_pattern))
+                if not subquad:
+                    out[name] = ("SKIP: full quadratic attention only "
+                                 "(no sliding-window/SSM variant)")
+                    continue
+        out[name] = "ok"
+    return out
+
+
+def make_batch(cfg: ModelConfig, seq: int, batch: int, key=None,
+               with_labels: bool = True) -> Dict[str, jax.Array]:
+    """Random concrete batch matching ``_token_specs`` (smoke tests)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    out: Dict[str, jax.Array] = {}
+    if cfg.frontend == "audio":
+        out["features"] = jax.random.normal(
+            ks[0], (batch, seq, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+        if with_labels:
+            out["labels"] = jax.random.randint(
+                ks[1], (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    elif cfg.frontend == "vision":
+        n_text = max(seq - cfg.num_patches, 16)
+        out["patches"] = jax.random.normal(
+            ks[0], (batch, cfg.num_patches, cfg.frontend_dim),
+            jnp.dtype(cfg.dtype))
+        out["tokens"] = jax.random.randint(
+            ks[1], (batch, n_text), 0, cfg.vocab_size, jnp.int32)
+        if with_labels:
+            out["labels"] = jax.random.randint(
+                ks[2], (batch, n_text), 0, cfg.vocab_size, jnp.int32)
+    else:
+        out["tokens"] = jax.random.randint(
+            ks[0], (batch, seq), 0, cfg.vocab_size, jnp.int32)
+        if with_labels:
+            out["labels"] = jax.random.randint(
+                ks[1], (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    return out

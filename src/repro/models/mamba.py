@@ -1,0 +1,137 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba, hymba's SSM heads).
+
+Full-sequence path: chunked parallel scan — ``lax.scan`` over time chunks
+carrying the SSM state, ``lax.associative_scan`` inside each chunk. This
+bounds the (B, chunk, d_inner, N) working set (the naive full-sequence
+associative scan would materialize (B, S, d_inner, N), ~GBs at 32k+).
+
+Decode path: O(1) recurrent update with (conv window, ssm state) caches.
+
+TPU adaptation note (DESIGN.md §2): the recurrence is kept in float32 and
+the d_inner axis is the sharding axis (model/TP) — the state never crosses
+devices, so SSM layers add zero collective traffic beyond the in/out
+projections, which the HAP cost model exploits.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, conv_w - 1, d_inner) trailing inputs
+    ssm: jax.Array    # (B, d_inner, N) state, float32
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, di), w: (cw, di)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(x_c: jax.Array, p: Dict[str, Any], cfg: ModelConfig):
+    """x_c: (B, S, di) -> dt (B,S,di), B_ssm/C_ssm (B,S,N), A (di,N)."""
+    r, n = cfg.ssm_dt_rank, cfg.ssm_state
+    proj = jnp.einsum("bsd,de->bse", x_c, p["x_proj"])
+    dt_raw, B_ssm, C_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_raw, p["dt_w"]).astype(jnp.float32)
+        + p["dt_b"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di, N)
+    return dt, B_ssm.astype(jnp.float32), C_ssm.astype(jnp.float32), A
+
+
+def _scan_chunk(a_bar, bx, h0):
+    """Associative scan within one chunk.
+
+    a_bar, bx: (B, cs, di, N); h0: (B, di, N). Returns (h_all, h_last).
+    """
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return ar * al, ar * bl + br
+    a_pre, b_pre = jax.lax.associative_scan(comb, (a_bar, bx), axis=1)
+    h_all = a_pre * h0[:, None] + b_pre
+    return h_all, h_all[:, -1]
+
+
+def mamba_mixer(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig,
+                plan=None, chunk: int = 256) -> jax.Array:
+    """Full-sequence mamba1 block: (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    if plan is not None and not plan.is_null:
+        x_in = plan.constrain(x_in, plan.act_btdi())
+        z = plan.constrain(z, plan.act_btdi())
+    x_c = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+
+    dt, B_ssm, C_ssm, A = _ssm_inputs(x_c, p, cfg)
+    xf = x_c.astype(jnp.float32)
+
+    cs = min(chunk, S)
+    while S % cs:
+        cs -= 1
+    n_chunks = S // cs
+
+    def step(h, xs):
+        dt_c, b_c, c_c, x_cc = xs                     # (B, cs, ...)
+        a_bar = jnp.exp(dt_c[..., None] * A)          # (B, cs, di, N)
+        bx = (dt_c * x_cc)[..., None] * b_c[:, :, None, :]
+        h_all, h_last = _scan_chunk(a_bar, bx, h)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, c_c)
+        return h_last, y
+
+    def split_chunks(t):                               # (B, S, ...) -> (n, B, cs, ...)
+        return t.reshape((B, n_chunks, cs) + t.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (split_chunks(dt), split_chunks(B_ssm),
+                                    split_chunks(C_ssm), split_chunks(xf)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y + xf * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                      preferred_element_type=x.dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba_decode_step(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig,
+                      cache: MambaCache) -> Tuple[jax.Array, MambaCache]:
+    """One-token recurrent step. x: (B, 1, d) -> (B, 1, d), new cache."""
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                # (B, 1, di)
+
+    window = jnp.concatenate([cache.conv.astype(x_in.dtype), x_in], axis=1)
+    w = p["conv_w"].astype(jnp.float32)                # (cw, di)
+    x_c = jnp.sum(window.astype(jnp.float32) * w[None], axis=1, keepdims=True)
+    x_c = jax.nn.silu(x_c + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv = window[:, 1:]
+
+    dt, B_ssm, C_ssm, A = _ssm_inputs(x_c, p, cfg)     # (B,1,...)
+    a_bar = jnp.exp(dt[..., None] * A)                 # (B, 1, di, N)
+    bx = (dt * x_c.astype(jnp.float32))[..., None] * B_ssm[:, :, None, :]
+    h = a_bar[:, 0] * cache.ssm + bx[:, 0]             # (B, di, N)
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm[:, 0])[:, None, :]
+    y = y + x_c.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=x.dtype)
+    return out, MambaCache(conv=new_conv, ssm=h)

@@ -1,0 +1,210 @@
+"""Mixture-of-Experts: router, capacity-based dispatch, shared experts.
+
+Three execution modes, selected by the ShardingPlan (i.e. by the HAP
+strategy for the Expert module — the paper's central object of study):
+
+  local — single device (CPU smoke tests). Dispatch + dense per-expert GEMM.
+  tp    — expert weights sharded on the intermediate dim over the TP axis;
+          every device processes every token of every expert; combine is a
+          psum inserted by SPMD (this is the paper's "TP" expert strategy,
+          all-reduce communication pattern).
+  ep    — experts sharded over the EP axis; tokens are exchanged with
+          all_to_all inside shard_map (the paper's "EP" strategy).
+
+Dispatch is GShard-style with a static capacity
+``C = ceil(T * top_k / E * capacity_factor)`` per expert: tokens beyond an
+expert's capacity are dropped (standard in inference engines; the HAP cost
+model's 2x activation upper bound for EP imbalance mirrors the paper).
+The dispatch is gather-based (an index map scattered once, then a single
+gather) to avoid materializing a (T*k, d) replica of the activations.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .common import activation_fn, glu_ffn
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array          # (B, S, d)
+    aux_loss: jax.Array   # scalar load-balance loss
+
+
+def capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(num_tokens * cfg.top_k / cfg.n_routed_experts
+                  * cfg.capacity_factor)
+    return max(8, int(math.ceil(c / 8) * 8))
+
+
+def route(x_flat: jax.Array, router_w: jax.Array, cfg: ModelConfig):
+    """Top-k routing. x_flat: (T, d) -> gates (T,k), idx (T,k), aux_loss."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss: E * sum(frac_tokens * frac_probs)
+    E = cfg.n_routed_experts
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def make_dispatch(idx: jax.Array, gates: jax.Array, E: int, C: int):
+    """Scatter coordinates with capacity dropping.
+
+    Returns (flat_expert (T*k,), pos_in_expert (T*k,), keep (T*k,),
+    flat_gates (T*k,)). Entries with pos_in_expert >= C are dropped.
+    """
+    flat_expert = idx.reshape(-1)                              # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)   # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                       # (T*k, E)
+    pos_in_expert = jnp.sum(pos * onehot, axis=-1)             # (T*k,)
+    keep = pos_in_expert < C
+    return flat_expert, pos_in_expert, keep, gates.reshape(-1)
+
+
+def dispatch(x_flat, flat_expert, pos_in_expert, E: int, C: int):
+    """Gather-based scatter of tokens into (E, C, d) expert buffers."""
+    T = x_flat.shape[0]
+    k = flat_expert.shape[0] // T
+    token_id = jnp.arange(T * k, dtype=jnp.int32) // k
+    # sentinel T = "empty slot"; overflow entries dropped by mode="drop"
+    idx_map = jnp.full((E, C), T, jnp.int32)
+    idx_map = idx_map.at[flat_expert, pos_in_expert].set(token_id,
+                                                         mode="drop")
+    x_pad = jnp.concatenate(
+        [x_flat, jnp.zeros((1, x_flat.shape[-1]), x_flat.dtype)], axis=0)
+    return x_pad[idx_map], idx_map                              # (E, C, d)
+
+
+def combine(y_buf, flat_expert, pos_in_expert, keep, flat_gates, T: int):
+    """Gather expert outputs back: y_buf (E, C, d) -> (T, d)."""
+    k = flat_expert.shape[0] // T
+    safe_pos = jnp.where(keep, pos_in_expert, 0)
+    gathered = y_buf[flat_expert, safe_pos]                    # (T*k, d)
+    gathered = gathered * (flat_gates * keep)[:, None].astype(y_buf.dtype)
+    return jnp.sum(gathered.reshape(T, k, -1), axis=1)
+
+
+def expert_ffn(buf: jax.Array, wi_gate: jax.Array, wi_up: jax.Array,
+               wo: jax.Array, act_name: str) -> jax.Array:
+    """(E, C, d) x (E, d, f)^2 x (E, f, d) -> (E, C, d)."""
+    act = activation_fn(act_name)
+    gate = jnp.einsum("ecd,edf->ecf", buf, wi_gate)
+    up = jnp.einsum("ecd,edf->ecf", buf, wi_up)
+    return jnp.einsum("ecf,efd->ecd", act(gate) * up, wo,
+                      preferred_element_type=buf.dtype)
+
+
+# ---------------------------------------------------------------------------
+def _moe_local(x_flat, moe_p, cfg: ModelConfig):
+    T = x_flat.shape[0]
+    E = cfg.n_routed_experts
+    C = capacity(T, cfg)
+    gates, idx, aux = route(x_flat, moe_p["router"], cfg)
+    fe, pe, keep, fg = make_dispatch(idx, gates, E, C)
+    buf, _ = dispatch(x_flat, fe, pe, E, C)
+    y_buf = expert_ffn(buf, moe_p["wi_gate"], moe_p["wi_up"],
+                       moe_p["wo"], cfg.activation)
+    y = combine(y_buf, fe, pe, keep, fg, T)
+    return y, aux
+
+
+def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan):
+    """EP: experts sharded over plan.ep_axis; all_to_all token exchange.
+
+    x_flat is (T, d) sharded over the DP axes; router weights replicated;
+    expert weights (E, d, 2f)/(E, f, d) sharded on E.
+    """
+    mesh = plan.mesh
+    ep_ax = plan.ep_axis
+    E = cfg.n_routed_experts
+    # Token sharding for dispatch: split over BOTH the DP axes and the EP
+    # axis when divisible (each device dispatches T/(dp*ep) tokens — no
+    # redundant expert compute); fall back to DP-only (tokens replicated
+    # within EP groups — correct but redundant, only hit by tiny decode
+    # batches) when T doesn't divide.
+    T = x_flat.shape[0]
+    dp_size = 1
+    for a in plan.dp_axes:
+        dp_size *= plan.axis_size(a)
+    ep_size = plan.axis_size(ep_ax)
+    if T % (dp_size * ep_size) == 0:
+        tok_axes = tuple(plan.dp_axes) + (ep_ax,)
+    elif dp_size > 1 and T % dp_size == 0:
+        tok_axes = tuple(plan.dp_axes)
+    else:
+        tok_axes = ()
+    dp_spec = P(tok_axes or None, None)
+
+    def local_fn(xl, router_w, wig_l, wiu_l, wo_l):
+        # xl: (T_loc, d) — this device's dispatch shard.
+        T_loc = xl.shape[0]
+        C_loc = capacity(T_loc, cfg)
+        gates, idx, aux = route(xl, router_w, cfg)
+        fe, pe, keep, fg = make_dispatch(idx, gates, E, C_loc)
+        buf, _ = dispatch(xl, fe, pe, E, C_loc)             # (E, C_loc, d)
+        # exchange: every device sends E/ep expert-slabs to each peer
+        buf = jax.lax.all_to_all(buf, ep_ax, split_axis=0, concat_axis=1,
+                                 tiled=True)                # (E/ep, C_loc*ep, d)
+        y_buf = expert_ffn(buf, wig_l, wiu_l, wo_l, cfg.activation)
+        y_buf = jax.lax.all_to_all(y_buf, ep_ax, split_axis=1, concat_axis=0,
+                                   tiled=True)              # (E, C_loc, d)
+        y = combine(y_buf, fe, pe, keep, fg, T_loc)
+        return y, jax.lax.pmean(aux, ep_ax)
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(dp_spec, P(None, None), P(ep_ax, None, None),
+                  P(ep_ax, None, None), P(ep_ax, None, None)),
+        out_specs=(dp_spec, P()),
+        check_vma=False)
+    y, aux = fn(x_flat, moe_p["router"], moe_p["wi_gate"],
+                moe_p["wi_up"], moe_p["wo"])
+    return y, jnp.mean(aux)
+
+
+def _moe_tp(x_flat, moe_p, cfg: ModelConfig, plan):
+    """TP: expert intermediate dim sharded; SPMD inserts the all-reduce."""
+    T = x_flat.shape[0]
+    E = cfg.n_routed_experts
+    C = capacity(T, cfg)
+    gates, idx, aux = route(x_flat, moe_p["router"], cfg)
+    fe, pe, keep, fg = make_dispatch(idx, gates, E, C)
+    buf, _ = dispatch(x_flat, fe, pe, E, C)
+    buf = plan.constrain(buf, P(None, plan.dp, None))
+    y_buf = expert_ffn(buf, moe_p["wi_gate"], moe_p["wi_up"],
+                       moe_p["wo"], cfg.activation)
+    y_buf = plan.constrain(y_buf, P(None, plan.dp, None))
+    y = combine(y_buf, fe, pe, keep, fg, T)
+    return y, aux
+
+
+def apply_moe(x: jax.Array, moe_p: Dict[str, Any], cfg: ModelConfig,
+              plan) -> MoEOut:
+    """x: (B, S, d) -> MoEOut. Routed experts + optional shared experts."""
+    B, S, d = x.shape
+    x_flat = x.reshape(B * S, d)
+
+    if plan is None or plan.is_null:
+        y, aux = _moe_local(x_flat, moe_p, cfg)
+    elif plan.ffn_mode == "ep" and plan.ep_axis is not None:
+        y, aux = _moe_ep_shardmap(x_flat, moe_p, cfg, plan)
+    else:
+        y, aux = _moe_tp(x_flat, moe_p, cfg, plan)
+
+    if cfg.n_shared_experts:
+        y_shared = glu_ffn(x_flat, moe_p["shared_wi_gate"],
+                           moe_p["shared_wi_up"], moe_p["shared_wo"],
+                           cfg.activation)
+        y = y + y_shared
+    return MoEOut(y.reshape(B, S, d), aux * cfg.router_aux_loss_coef)

@@ -1,0 +1,2 @@
+from .engine import InferenceEngine, Request  # noqa: F401
+from .scheduler import FifoScheduler  # noqa: F401

@@ -1,0 +1,30 @@
+"""Token sampling strategies."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0        # 0 => greedy
+    top_k: int = 0                  # 0 => no top-k filter
+    seed: int = 0
+
+
+def sample(logits: jax.Array, params: SamplingParams,
+           key: Optional[jax.Array] = None) -> jax.Array:
+    """logits: (B, V) -> (B,) int32 next tokens."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        top_vals, _ = jax.lax.top_k(logits, params.top_k)
+        thresh = top_vals[:, -1:]
+        logits = jnp.where(logits >= thresh, logits, -1e30)
+    if key is None:
+        key = jax.random.PRNGKey(params.seed)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,60 @@
+"""Request batching: FIFO with padding buckets.
+
+Static batching (DeepSpeed-FastGen style batch-oriented serving, which is
+what the paper evaluates): requests queue up, the scheduler drains up to
+``max_batch`` of them, left-pads prompts to a shared bucket length, runs
+prefill once and decodes the whole batch in lockstep until every request
+hits its stop condition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QueuedRequest:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+
+
+class FifoScheduler:
+    def __init__(self, max_batch: int = 8, bucket: int = 64):
+        self.max_batch = max_batch
+        self.bucket = bucket
+        self._q: Deque[QueuedRequest] = deque()
+        self._next_uid = 0
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 32) -> int:
+        uid = self._next_uid
+        self._next_uid += 1
+        self._q.append(QueuedRequest(uid, np.asarray(prompt, np.int32),
+                                     max_new_tokens))
+        return uid
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def next_batch(self) -> Optional[List[QueuedRequest]]:
+        if not self._q:
+            return None
+        batch = []
+        while self._q and len(batch) < self.max_batch:
+            batch.append(self._q.popleft())
+        return batch
+
+    def pad_batch(self, batch: List[QueuedRequest], pad_id: int = 0):
+        """Left-pad to a bucket multiple. Returns (tokens (B, S), lengths)."""
+        max_len = max(len(r.prompt) for r in batch)
+        S = int(np.ceil(max_len / self.bucket) * self.bucket)
+        B = len(batch)
+        toks = np.full((B, S), pad_id, np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, S - len(r.prompt):] = r.prompt
+            lens[i] = len(r.prompt)
+        return toks, lens

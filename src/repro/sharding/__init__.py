@@ -1,0 +1,1 @@
+from .specs import ShardingPlan, make_plan  # noqa: F401

@@ -1,0 +1,202 @@
+"""Sharding plans: how a HAP strategy maps onto a fixed TPU mesh.
+
+The paper picks parallelism *degrees* on a flat GPU node; on a TPU pod the
+mesh shape is fixed, so a strategy becomes an *assignment of tensor
+dimensions to mesh axes*. A ``ShardingPlan`` carries that assignment and
+hands out ``PartitionSpec``s to the model code, which only ever calls
+``plan.pspec(...)`` / ``plan.constrain(...)`` — with a null plan (no mesh)
+everything degenerates to unsharded single-device execution, which is what
+the CPU smoke tests use.
+
+Two attention modes (see DESIGN.md §5):
+  - ``tp_heads``   — q/o weights sharded over heads on the TP axis; k/v
+                     sharded too when ``num_kv_heads % tp == 0`` else
+                     replicated (transient K/V small). Decode KV cache
+                     sharded over heads when divisible, else over sequence.
+  - ``replicated`` — attention weights replicated (used when the head count
+                     does not divide the axis, e.g. hymba's 25 heads, or when
+                     HAP selects attention-DP); the model axis then only
+                     parallelizes the FFN / expert / mamba side.
+
+Expert modes: ``tp`` (expert d_ff sharded on TP axis, psum combine) or
+``ep`` (expert dim sharded on the EP axis, all_to_all dispatch inside
+shard_map).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple  # noqa: F401
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Optional[Mesh] = None
+    # axis-name assignments (None = unused)
+    dp_axes: Tuple[str, ...] = ()          # batch axes ("pod","data") / ("data",)
+    attn_mode: str = "tp_heads"            # tp_heads | replicated
+    attn_tp_axis: Optional[str] = None     # heads axis ("model")
+    kv_shard: str = "heads"                # heads | seq | none (cache layout)
+    ffn_mode: str = "tp"                   # tp | ep  (experts; dense FFN: tp)
+    ffn_tp_axis: Optional[str] = None
+    ep_axis: Optional[str] = None
+    seq_axis: Optional[str] = None         # sequence sharding for long-context
+    # Megatron-style sequence parallelism: residual-stream activations
+    # (B, S, d) live sequence-sharded on the TP axis between layers, so
+    # per-layer saved activations shrink by |tp| and the per-sublayer
+    # all-reduce becomes reduce-scatter + all-gather. Off for decode (S=1).
+    seq_shard_acts: bool = False
+    # FSDP/ZeRO-3: every parameter (and optimizer moment) sharded over ALL
+    # mesh axes; weights are all-gathered per layer inside the scan and
+    # gradients reduce-scattered — pure data-parallel compute. This is the
+    # training-side analog of HAP's attention-DP strategy (beyond-paper,
+    # see EXPERIMENTS §Perf).
+    fsdp: bool = False
+
+    # ---------------------------------------------------------------
+    @property
+    def is_null(self) -> bool:
+        return self.mesh is None
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if self.mesh is None or name is None:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def dp(self) -> Tuple[str, ...] | None:
+        return self.dp_axes if self.dp_axes else None
+
+    # -- PartitionSpec builders ---------------------------------------
+    def pspec(self, *axes) -> P:
+        """Build a PartitionSpec; entries are axis names, tuples or None."""
+        return P(*axes)
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    # -- common activation specs --------------------------------------
+    def act_btd(self) -> P:
+        """(B, S, d_model) residual-stream activations."""
+        if self.seq_shard_acts and self.attn_tp_axis:
+            return P(self.dp, self.attn_tp_axis, None)
+        return P(self.dp, None, None)
+
+    def act_bthd(self, heads_sharded: bool) -> P:
+        """(B, S, H, hd) projections."""
+        if heads_sharded and self.attn_tp_axis:
+            return P(self.dp, None, self.attn_tp_axis, None)
+        return P(self.dp, None, None, None)
+
+    def kv_cache_spec(self) -> P:
+        """(L, B, S, K, hd) decode KV cache."""
+        if self.kv_shard == "heads" and self.attn_tp_axis:
+            return P(None, self.dp, None, self.attn_tp_axis, None)
+        if self.kv_shard == "seq" and self.attn_tp_axis:
+            return P(None, self.dp, self.attn_tp_axis, None, None)
+        if self.kv_shard == "seq_all":
+            # batch-1 long-context: sequence sharded over every mesh axis
+            axes = tuple(self.mesh.axis_names) if self.mesh else ()
+            return P(None, None, axes or None, None, None)
+        return P(None, self.dp, None, None, None)
+
+    def cache_spec_bshd(self) -> P:
+        """(B, S, K, hd) per-layer cache view inside the layer scan."""
+        full = self.kv_cache_spec()
+        return P(*tuple(full)[1:])
+
+    def ssm_cache_spec(self) -> P:
+        """(L, B, d_inner, N) mamba state cache."""
+        ax = self.ffn_tp_axis or self.attn_tp_axis
+        return P(None, self.dp, ax, None)
+
+    def conv_cache_spec(self) -> P:
+        """(L, B, conv_w, d_inner)."""
+        ax = self.ffn_tp_axis or self.attn_tp_axis
+        return P(None, self.dp, None, ax)
+
+    def act_btdi(self) -> P:
+        """(B, S, d_inner) mamba activations: channels on the TP axis."""
+        ax = self.ffn_tp_axis or self.attn_tp_axis
+        return P(self.dp, None, ax)
+
+
+NULL_PLAN = ShardingPlan()
+
+
+def make_plan(mesh: Optional[Mesh], cfg, *, attn_override: str = "",
+              expert_mode: str = "", kv_shard: str = "") -> ShardingPlan:
+    """Derive the default (baseline) plan for a config on a mesh.
+
+    The HAP planner (core/hap.py) produces strategy names; this translates
+    them into a mesh-legal ``ShardingPlan``. Overrides let the dry-run /
+    perf loop force specific layouts.
+    """
+    if mesh is None:
+        return NULL_PLAN
+    axis_names = mesh.axis_names
+    model_ax = "model" if "model" in axis_names else axis_names[-1]
+    dp_axes = tuple(a for a in axis_names if a != model_ax)
+    tp = mesh.shape[model_ax]
+
+    # attention mode legality
+    heads_ok = cfg.has_attention and cfg.num_heads % tp == 0
+    attn_mode = attn_override or ("tp_heads" if heads_ok else "replicated")
+    if attn_mode == "tp_heads" and not heads_ok:
+        attn_mode = "replicated"
+
+    # decode KV cache layout
+    if not kv_shard:
+        if attn_mode == "tp_heads" and cfg.num_kv_heads % tp == 0:
+            kv_shard = "heads"
+        else:
+            kv_shard = "seq"
+
+    # expert / ffn mode
+    if not expert_mode:
+        if cfg.is_moe and cfg.n_routed_experts % tp == 0:
+            expert_mode = "ep"
+        else:
+            expert_mode = "tp"
+    if expert_mode == "ep" and (not cfg.is_moe
+                                or cfg.n_routed_experts % tp != 0):
+        expert_mode = "tp"
+
+    return ShardingPlan(
+        mesh=mesh,
+        dp_axes=dp_axes,
+        attn_mode=attn_mode,
+        attn_tp_axis=model_ax,
+        kv_shard=kv_shard,
+        ffn_mode=expert_mode,
+        ffn_tp_axis=model_ax,
+        ep_axis=model_ax if expert_mode == "ep" else None,
+    )
+
+
+def adapt_plan_for_batch(plan: ShardingPlan, cfg, batch: int,
+                         kind: str) -> ShardingPlan:
+    """Shape-aware fixups: a batch that doesn't divide the DP axes cannot
+    be data-sharded (long_500k has batch 1) — drop DP and spread the KV
+    cache sequence over every axis instead."""
+    if plan.is_null:
+        return plan
+    plan = dataclasses.replace(
+        plan, seq_shard_acts=(kind in ("train", "prefill")))
+    dp_size = 1
+    for a in plan.dp_axes:
+        dp_size *= plan.axis_size(a)
+    if batch % max(dp_size, 1) == 0:
+        return plan
+    kv = "seq_all" if (kind == "decode" and cfg.has_attention) else plan.kv_shard
+    return dataclasses.replace(plan, dp_axes=(), kv_shard=kv)

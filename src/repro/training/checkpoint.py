@@ -1,0 +1,66 @@
+"""Checkpointing: msgpack-framed npz-style tree save/load.
+
+Layout: <dir>/step_<N>/arrays.npz + tree.msgpack (leaf paths + metadata).
+Works for any pytree of jax/np arrays; device arrays are fetched to host.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> Tuple[list, Any]:
+    paths = jax.tree.flatten_with_path(tree)[0]
+    treedef = jax.tree.structure(tree)
+    names, leaves = [], []
+    for path, leaf in paths:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        names.append(name)
+        leaves.append(leaf)
+    return list(zip(names, leaves)), treedef
+
+
+def save_checkpoint(directory: str, tree, step: int) -> str:
+    out = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    named, _ = _flatten_with_names(tree)
+    arrays = {}
+    meta = {"step": step, "names": []}
+    for i, (name, leaf) in enumerate(named):
+        key = f"a{i}"
+        arrays[key] = np.asarray(leaf)
+        meta["names"].append(name)
+    np.savez(os.path.join(out, "arrays.npz"), **arrays)
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(os.path.basename(out))
+    return out
+
+
+def latest_step(directory: str) -> Optional[int]:
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        return int(f.read().strip().split("_")[-1])
+
+
+def load_checkpoint(directory: str, tree_like, step: Optional[int] = None):
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    src = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(src, "arrays.npz"))
+    leaves, treedef = jax.tree.flatten(tree_like)
+    restored = [data[f"a{i}"] for i in range(len(leaves))]
+    cast = [np.asarray(r).astype(l.dtype) if hasattr(l, "dtype") else r
+            for r, l in zip(restored, leaves)]
+    return jax.tree.unflatten(treedef, cast)

@@ -1,0 +1,73 @@
+"""Training loop: jitted step factory + a simple host-side driver."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_and_aux
+from .optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(cfg: ModelConfig, plan=None, *, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 1000,
+                    remat=True) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics). Jit-ready;
+    the dry-run lowers exactly this function on the production mesh."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss_fn(p):
+            loss, metrics = loss_and_aux(p, cfg, batch, plan, remat=remat)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        lr = cosine_lr(state.opt.step, base_lr, warmup, total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            state.params, grads, state.opt, lr=lr)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        return TrainState(new_params, new_opt), out
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key, dtype: Optional[str] = None
+                     ) -> TrainState:
+    from repro.models import init_params
+    params = init_params(cfg, key, dtype=dtype)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def train_loop(cfg: ModelConfig, data_iter, steps: int, *, plan=None,
+               state: Optional[TrainState] = None, log_every: int = 10,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0, seed: int = 0,
+               remat: bool = True) -> TrainState:
+    """Host driver: jit the step, iterate the data pipeline, log, ckpt."""
+    if state is None:
+        state = init_train_state(cfg, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(cfg, plan, total_steps=steps,
+                                      remat=remat))
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            loss = float(metrics["loss"])
+            print(f"step {i:5d} loss={loss:8.4f} "
+                  f"gnorm={float(metrics['grad_norm']):7.3f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+        if checkpoint_dir and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            from .checkpoint import save_checkpoint
+            save_checkpoint(checkpoint_dir, state, step=i + 1)
+    return state

@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only launch/dryrun.py forces 512 devices."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def reduced(name: str, **overrides):
+    cfg = get_config(name).reduced()
+    return dataclasses.replace(cfg, dtype="float32", **overrides)

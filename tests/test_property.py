@@ -1,0 +1,87 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ilp import HapIlp
+from repro.core.quantization import dequantize_int4, quantize_int4
+from repro.core.flops import Workload, ep_imbalance
+from repro.core.comm import layer_comm_bytes
+from repro.core.strategy import (AttnStrategy, ExpertStrategy,
+                                 attention_strategies, expert_strategies)
+from repro.configs import get_config
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.data())
+def test_ilp_optimality_property(ka, ke, data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    ilp = HapIlp(a=rng.random(ka), p=rng.random(ke), d=rng.random(ke),
+                 P=rng.random((ka, ke)), D=rng.random((ka, ke)),
+                 C=rng.random((ke, ke)))
+    k, i, j, v = ilp.solve()
+    kb, ib, jb, vb = ilp.brute_force()
+    assert abs(v - vb) < 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(2, 128), st.integers(0, 10_000))
+def test_quantization_error_bound_property(rows, half_groups, seed):
+    rng = np.random.default_rng(seed)
+    gs = 2 * half_groups
+    w = rng.standard_normal((rows, gs)).astype(np.float32) \
+        * np.exp(rng.uniform(-3, 3))
+    qt = quantize_int4(w, "per_group", gs)
+    wh = dequantize_int4(qt)
+    # absolute error bounded by half a quantization step everywhere
+    step = qt.scales.reshape(rows, 1)
+    assert np.all(np.abs(wh - w) <= step * 0.5 + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["mixtral-8x7b", "deepseek-moe-16b",
+                        "qwen3-moe-30b-a3b"]),
+       st.integers(1, 6), st.integers(6, 13), st.integers(0, 7))
+def test_strategy_spaces_cover_devices(name, logb, logs, gen_pow):
+    """Every enumerated strategy exactly covers the device count, and the
+    comm model is non-negative and finite for all pairs/phases."""
+    cfg = get_config(name)
+    n = 8
+    w = Workload(batch=2 ** logb, prompt=2 ** logs, gen=2 ** gen_pow)
+    for a in attention_strategies(cfg, n):
+        assert a.dp * a.tp == n
+        for e in expert_strategies(cfg, n):
+            assert e.tp * e.ep == n
+            for phase in ("prefill", "decode"):
+                v = layer_comm_bytes(cfg, w, phase, a, e, n)
+                assert np.isfinite(v) and v >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(7, 13))
+def test_ep_imbalance_monotonic_in_ep(batch, logs):
+    """More EP groups never reduce the imbalance factor; factor in
+    [1, ep]."""
+    cfg = get_config("mixtral-8x7b")
+    w = Workload(batch=batch, prompt=2 ** logs, gen=32)
+    prev = 1.0
+    for ep in (1, 2, 4, 8):
+        f = ep_imbalance(cfg, w, "decode", ep)
+        assert 1.0 <= f <= ep + 1e-9
+        assert f >= prev - 1e-9
+        prev = f
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 16 - 1))
+def test_int4_pack_unpack_exact(seed):
+    """Packing is lossless for values already on the grid."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 16, (4, 64)).astype(np.float32)
+    q[:, 0] = 0.0
+    q[:, 1] = 15.0   # pin the grid extremes so scale/zero are recovered
+    scale = np.full((4, 1), 0.37, np.float32)
+    zero = np.full((4, 1), -1.25, np.float32)
+    w = q * scale + zero
+    qt = quantize_int4(w, "per_group", 64)
+    wh = dequantize_int4(qt)
+    np.testing.assert_allclose(wh, w, atol=1e-5)

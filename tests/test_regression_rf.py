@@ -1,0 +1,45 @@
+"""Random-forest regression (the eta/rho fitting substrate)."""
+import numpy as np
+
+from repro.core.regression import (RandomForestRegressor, RegressionTree,
+                                   polynomial_features)
+
+
+def test_polynomial_features_shape():
+    X = np.random.default_rng(0).random((10, 3))
+    F = polynomial_features(X, degree=2, log_augment=True)
+    # 3 + 6 cross + 3 log = 12
+    assert F.shape == (10, 12)
+
+
+def test_tree_fits_step_function():
+    rng = np.random.default_rng(1)
+    X = rng.random((400, 2))
+    y = np.where(X[:, 0] > 0.5, 3.0, 1.0) + 0.01 * rng.standard_normal(400)
+    tree = RegressionTree(max_depth=4).fit(X, y)
+    pred = tree.predict(X)
+    assert np.mean(np.abs(pred - y)) < 0.1
+
+
+def test_forest_fits_multiplicative_surface():
+    """Latency-like target: y = a * x0 * x1^0.7 across decades."""
+    rng = np.random.default_rng(2)
+    X = np.exp(rng.uniform(0, 8, (800, 2)))
+    y = 3e-6 * X[:, 0] * X[:, 1] ** 0.7
+    Xf = polynomial_features(np.log1p(X), degree=2)
+    rf = RandomForestRegressor(n_trees=12, max_depth=10).fit(Xf, y)
+    Xt = np.exp(rng.uniform(0, 8, (200, 2)))
+    yt = 3e-6 * Xt[:, 0] * Xt[:, 1] ** 0.7
+    rel = np.abs(rf.predict(polynomial_features(np.log1p(Xt), 2)) - yt) / yt
+    assert np.mean(rel) < 0.25
+
+
+def test_forest_deterministic_given_seed():
+    rng = np.random.default_rng(3)
+    X = rng.random((100, 4))
+    y = X @ np.array([1.0, 2.0, 0.5, -1.0]) + 3
+    a = RandomForestRegressor(n_trees=4, seed=7,
+                              log_target=False).fit(X, y).predict(X[:5])
+    b = RandomForestRegressor(n_trees=4, seed=7,
+                              log_target=False).fit(X, y).predict(X[:5])
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,98 @@
+"""Multi-device sharding correctness — run in a subprocess with forced
+host devices so the main pytest process keeps its single real device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+
+
+@pytest.mark.slow
+def test_tp_sharded_loss_matches_single_device():
+    r = _run("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import init_params, make_batch, loss_and_aux
+        from repro.sharding.specs import make_plan
+        cfg = dataclasses.replace(get_config('mistral-nemo-12b').reduced(),
+                                  dtype='float32')
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        plan = make_plan(mesh, cfg)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = make_batch(cfg, 32, 4)
+        l0, _ = loss_and_aux(params, cfg, batch, None, remat=False)
+        with mesh:
+            l1, _ = jax.jit(lambda p, b: loss_and_aux(p, cfg, b, plan,
+                            remat=False))(params, batch)
+        diff = abs(float(l0) - float(l1))
+        assert diff < 2e-4, diff
+        print('OK', diff)
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_ep_moe_matches_local():
+    r = _run("""
+        import dataclasses, jax
+        from repro.configs import get_config
+        from repro.models import init_params, make_batch, loss_and_aux
+        from repro.sharding.specs import make_plan
+        cfg = dataclasses.replace(get_config('deepseek-moe-16b').reduced(),
+                                  dtype='float32', capacity_factor=8.0)
+        mesh = jax.make_mesh((4, 2), ('data', 'model'))
+        plan = make_plan(mesh, cfg, expert_mode='ep')
+        assert plan.ffn_mode == 'ep'
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        batch = make_batch(cfg, 32, 8)
+        _, m0 = loss_and_aux(params, cfg, batch, None, remat=False)
+        with mesh:
+            out = jax.jit(lambda p, b: loss_and_aux(p, cfg, b, plan,
+                          remat=False))(params, batch)
+        diff = abs(float(m0['ce']) - float(out[1]['ce']))
+        assert diff < 5e-4, diff
+        print('OK', diff)
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_decode_seq_sharded_cache_matches():
+    r = _run("""
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import init_params, make_batch, prefill, decode_step
+        from repro.sharding.specs import make_plan, adapt_plan_for_batch
+        cfg = dataclasses.replace(get_config('mistral-nemo-12b').reduced(),
+                                  dtype='float32')
+        mesh = jax.make_mesh((2, 4), ('data', 'model'))
+        plan = adapt_plan_for_batch(make_plan(mesh, cfg, kv_shard='seq'),
+                                    cfg, 2, 'decode')
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        pb = make_batch(cfg, 24, 2, with_labels=False)
+        lg0, c0 = prefill(params, cfg, pb, max_len=32)
+        tok = jnp.argmax(lg0, -1)[:, None].astype(jnp.int32)
+        lg1, _ = decode_step(params, cfg, tok, c0)
+        with mesh:
+            lg0s, c0s = jax.jit(lambda p, b: prefill(p, cfg, b, max_len=32,
+                                plan=plan))(params, pb)
+            lg1s, _ = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c,
+                              plan=plan))(params, tok, c0s)
+        import numpy as np
+        d = float(jnp.max(jnp.abs(lg1 - lg1s)))
+        assert d < 2e-3, d
+        print('OK', d)
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
