@@ -6,7 +6,7 @@ Run:  PYTHONPATH=src python examples/hap_search.py [--chips a6000,a100]
 import argparse
 
 from repro.configs import get_config
-from repro.core import HAPPlanner, Workload
+from repro.core import HAPSession, Workload
 from repro.core.latency import cached_latency_model
 
 SCENARIOS = [(256, 64), (256, 2048), (4096, 64), (4096, 2048)]
@@ -26,18 +26,23 @@ def main():
     for model in MODELS:
         cfg = get_config(model)
         for chip in args.chips.split(","):
-            planner = HAPPlanner(cfg, chip, args.devices,
-                                 model=cached_latency_model(chip))
+            # fallback="" -> surface infeasible workloads instead of the
+            # static-TP fallback an engine would want
+            session = HAPSession(cfg, chip, args.devices,
+                                 model=cached_latency_model(chip),
+                                 prompt_bucket=256, gen_bucket=64,
+                                 fallback="")
             for prompt, gen in SCENARIOS:
                 best = (0.0, None)
                 for b in batches:
                     w = Workload(batch=b, prompt=prompt, gen=gen)
                     try:
-                        plan = planner.plan(w)
+                        plan = session.plan_for(w)
                     except ValueError:
                         continue
-                    r = planner.evaluate(planner.tp_plan(), w) \
-                        / planner.evaluate(plan, w)
+                    r = session.planner.evaluate(
+                        session.planner.tp_plan(), w) \
+                        / session.planner.evaluate(plan, w)
                     if r > best[0]:
                         best = (r, plan)
                 sp, plan = best

@@ -1,55 +1,65 @@
-"""HAP-planned MoE serving with the dynamic parallelism transition.
+"""Adaptive HAP-planned MoE serving with the dynamic transition.
 
-Plans strategies for a long-context/short-output workload (the paper's
-Fig. 7 sweet spot), serves a batch of requests, and — when the plan
-switches expert layouts between prefill and decode — executes the INT4
-per-group transition, reporting its cost and the fidelity of the
-quantization round-trip.
+Builds a ``HAPSession`` at full mixtral scale (the paper's platform:
+4x A6000 over PCIe), then serves two workload buckets in one run — a
+short-prompt group and a long-prompt group. The engine re-plans at the
+bucket boundary through the session's plan cache and, when the expert
+layouts differ, executes the Eq.-6 transition (INT4 per-group restore or
+direct reshard), logging the switch.
 
 Run:  PYTHONPATH=src python examples/serve_moe.py
 """
 import dataclasses
+import logging
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import HAPPlanner, Workload
+from repro.core import HAPSession, Workload
 from repro.core.latency import cached_latency_model
 from repro.models import init_params
-from repro.serving import InferenceEngine, Request
+from repro.serving import Request
 
 
 def main():
-    # planning happens at FULL mixtral scale (the paper's platform:
-    # 4x A6000 over PCIe) ...
+    logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
+    # planning happens at FULL mixtral scale ...
     full_cfg = get_config("mixtral-8x7b")
-    planner = HAPPlanner(full_cfg, "a6000", 4,
-                         model=cached_latency_model("a6000"))
-    w = Workload(batch=8, prompt=4096, gen=64)
-    plan = planner.plan(w)
-    t_hap = planner.evaluate(plan, w)
-    t_tp = planner.evaluate(planner.tp_plan(), w)
+    session = HAPSession(full_cfg, "a6000", 4,
+                         model=cached_latency_model("a6000"),
+                         prompt_bucket=32, gen_bucket=16)
+    w = Workload(batch=4, prompt=4096, gen=64)   # Fig. 7 sweet spot
+    plan = session.plan_for(w)
+    t_hap = session.planner.evaluate(plan, w)
+    t_tp = session.planner.evaluate(session.planner.tp_plan(), w)
     print(f"HAP plan: {plan.describe()}")
     print(f"  predicted {t_hap:.2f}s vs static TP {t_tp:.2f}s "
           f"-> {t_tp/t_hap:.2f}x  (ILP {plan.ilp_time*1e3:.0f}ms, "
           f"switch cost {plan.switch_cost*1e3:.1f}ms)")
 
-    # ... execution is demonstrated on the reduced variant (CPU box)
+    # ... execution is demonstrated on the reduced variant (CPU box):
+    # two prompt buckets -> two batches -> a logged re-plan between them.
     cfg = dataclasses.replace(full_cfg.reduced(), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = InferenceEngine(cfg, params, hap_plan=plan,
-                             use_int4_transition=True, max_batch=4)
+    engine = session.engine(params, cfg=cfg, max_batch=4)
     rng = np.random.default_rng(0)
-    for _ in range(4):
+    # two short requests, then four long: at this batch/bucket point the
+    # a6000x4 planner flips the expert layout (TP4 -> EP4), so the second
+    # batch triggers a real inter-batch Eq.-6 transition.
+    for n in (12, 20, 70, 80, 90, 75):
         engine.submit(Request(
-            prompt=rng.integers(1, cfg.vocab_size, 48).tolist(),
+            prompt=rng.integers(1, cfg.vocab_size, n).tolist(),
             max_new_tokens=16))
     for comp in engine.run():
         print(f"req {comp.uid}: {len(comp.tokens)} tokens "
               f"(prefill {comp.prefill_ms:.0f}ms, "
               f"transition {comp.transition_ms:.1f}ms, "
               f"decode {comp.decode_ms:.0f}ms)")
+    st = engine.stats
+    print(f"batches={st.batches} plan_switches={st.plan_switches} "
+          f"cache_hits={st.cache_hits} "
+          f"transition_total={st.transition_ms_total:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 """HAP core — the paper's contribution: module-decomposed latency
 simulation, strategy search space, ILP selection, dynamic transition."""
 from .flops import Workload  # noqa: F401
-from .hap import HAPPlan, HAPPlanner  # noqa: F401
+from .hap import HAPPlan, HAPPlanner, fixed_plan  # noqa: F401
+from .session import (FixedPlanSource, HAPSession,  # noqa: F401
+                      IlpPlanSource, PlanSource, StaticPlanSource,
+                      WorkloadBucket)
 from .hardware import CHIPS, ChipSpec, GroundTruth, get_chip  # noqa: F401
 from .ilp import HapIlp, OneHotIlp  # noqa: F401
 from .latency import InferenceSimulator, LatencyModel  # noqa: F401

@@ -58,6 +58,37 @@ class HAPPlan:
             s += f" (transition via {self.mechanism})"
         return s
 
+    def to_sharding_plan(self, mesh, cfg, *, phase: str = "decode"):
+        """Map the chosen strategy degrees onto a fixed mesh.
+
+        The strategy→mesh bridge (DESIGN.md §5): the paper's flat degree
+        tuples become axis assignments on a TPU mesh. ``phase`` selects
+        which expert layout to materialize — the plan may switch expert
+        strategies between prefill and decode (Eq. 6), so each phase gets
+        its own ``ShardingPlan``. With ``mesh=None`` this returns the null
+        plan (unsharded single-device execution).
+        """
+        from repro.sharding.specs import strategy_sharding_plan
+        if phase not in ("prefill", "decode"):
+            raise ValueError(f"phase must be prefill|decode, got {phase!r}")
+        expert = (self.expert_prefill if phase == "prefill"
+                  else self.expert_decode)
+        return strategy_sharding_plan(mesh, cfg, self.attn, expert)
+
+
+def fixed_plan(attn: str, expert_prefill: str,
+               expert_decode: str = "", mechanism: str = "reshard"
+               ) -> HAPPlan:
+    """A user-pinned plan from strategy names, e.g.
+    ``fixed_plan("DP2xTP2", "EP4", "TP4")`` — for CLI overrides and tests.
+    """
+    ep = ExpertStrategy.parse(expert_prefill)
+    ed = ExpertStrategy.parse(expert_decode) if expert_decode else ep
+    return HAPPlan(attn=AttnStrategy.parse(attn), expert_prefill=ep,
+                   expert_decode=ed, predicted_latency=float("nan"),
+                   ilp_time=0.0, switch_cost=0.0,
+                   mechanism=mechanism if ep != ed else "none")
+
 
 class HAPPlanner:
     def __init__(self, cfg: ModelConfig, chip: str, n_devices: int,
@@ -134,16 +165,22 @@ class HAPPlanner:
             mechanism=self._mechanism(w, i, j),
         )
 
-    def _mechanism(self, w: Workload, i: int, j: int) -> str:
+    def transition_between(self, w: Workload, e_from: ExpertStrategy,
+                           e_to: ExpertStrategy):
+        """Eq.-6 cost terms for switching the expert layout e_from→e_to
+        under workload ``w`` (used both for the in-plan prefill→decode
+        switch and for inter-batch plan switches in the serving engine)."""
         from .transition import transition_costs
+        t_layer = (self.sim.attn_time(w, "prefill", self.attn_space[0])
+                   + self.sim.expert_time(w, "prefill", e_from))
+        return transition_costs(self.cfg, w, self.chip, self.n, e_from,
+                                e_to, t_layer, gt=self.sim.gt)
+
+    def _mechanism(self, w: Workload, i: int, j: int) -> str:
         ei, ej = self.expert_space[i], self.expert_space[j]
         if ei == ej:
             return "none"
-        t_layer = (self.sim.attn_time(w, "prefill", self.attn_space[0])
-                   + self.sim.expert_time(w, "prefill", ei))
-        tc = transition_costs(self.cfg, w, self.chip, self.n, ei, ej,
-                              t_layer, gt=self.sim.gt)
-        return tc.mechanism
+        return self.transition_between(w, ei, ej).mechanism
 
     # -- static baselines ----------------------------------------------------
     def tp_plan(self) -> HAPPlan:

@@ -16,9 +16,29 @@ attention-free SSMs the Attention-module strategies govern the mamba mixer
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import List, Tuple
 
 from repro.configs.base import ModelConfig
+
+
+def _parse_degrees(spec: str) -> dict:
+    """'DP2xTP2' / 'EP4' / 'TP4' -> {'dp': 2, 'tp': 2} etc. (degree >= 1)."""
+    out = {}
+    for part in spec.strip().split("x"):
+        m = re.fullmatch(r"(DP|TP|EP)(\d+)", part.strip(), re.IGNORECASE)
+        if not m:
+            raise ValueError(f"bad strategy spec {spec!r} "
+                             "(expected e.g. TP4, EP2xTP2, DP2xTP2)")
+        key, deg = m.group(1).lower(), int(m.group(2))
+        if deg < 1:
+            raise ValueError(f"bad strategy spec {spec!r}: degree must "
+                             "be >= 1")
+        if key in out:
+            raise ValueError(f"bad strategy spec {spec!r}: duplicate "
+                             f"{key.upper()} axis")
+        out[key] = deg
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +54,14 @@ class AttnStrategy:
             return f"TP{self.tp}"
         return f"DP{self.dp}xTP{self.tp}"
 
+    @classmethod
+    def parse(cls, spec: str) -> "AttnStrategy":
+        """Inverse of ``name``: 'DP2xTP2' -> AttnStrategy(dp=2, tp=2)."""
+        d = _parse_degrees(spec)
+        if "ep" in d:
+            raise ValueError(f"attention strategy {spec!r} cannot use EP")
+        return cls(dp=d.get("dp", 1), tp=d.get("tp", 1))
+
 
 @dataclasses.dataclass(frozen=True)
 class ExpertStrategy:
@@ -47,6 +75,15 @@ class ExpertStrategy:
         if self.tp == 1:
             return f"EP{self.ep}"
         return f"EP{self.ep}xTP{self.tp}"
+
+    @classmethod
+    def parse(cls, spec: str) -> "ExpertStrategy":
+        """Inverse of ``name``: 'EP2xTP2' -> ExpertStrategy(tp=2, ep=2)."""
+        d = _parse_degrees(spec)
+        if "dp" in d:
+            raise ValueError(f"expert strategy {spec!r} cannot use DP "
+                             "(excluded on memory grounds, §III-C)")
+        return cls(tp=d.get("tp", 1), ep=d.get("ep", 1))
 
 
 def _pow2_divisors(n: int) -> List[int]:

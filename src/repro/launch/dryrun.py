@@ -134,10 +134,25 @@ def probe_layer_costs(cfg, shape_name: str, mesh, plan) -> roofline.Costs:
     return _probe(cfg, shape_name, mesh, plan)
 
 
+def _session_plan(cfg, mesh, seq: int, batch: int, kind: str,
+                  source: str, chip: str):
+    """Strategy via a PlanSource (ILP planner or static baselines), bridged
+    onto the mesh with ``HAPPlan.to_sharding_plan`` — the adaptive path."""
+    from repro.core import HAPSession, Workload
+    from repro.core.latency import cached_latency_model
+    session = HAPSession(cfg, chip, mesh.size, source=source,
+                         model=cached_latency_model(chip), mesh=mesh,
+                         prompt_bucket=max(seq, 1))
+    w = Workload(batch=batch, prompt=seq, gen=64)
+    phase = "decode" if kind == "decode" else "prefill"
+    return session.sharding_plan(w, phase=phase)
+
+
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               expert_mode: str = "", attn_mode: str = "", kv_shard: str = "",
               probe: bool = True, verbose: bool = True,
-              cfg_override=None, plan_override=None
+              cfg_override=None, plan_override=None,
+              source: str = "baseline", chip: str = "a6000"
               ) -> Optional[roofline.RooflineReport]:
     cfg = cfg_override or get_config(arch)
     status = supported_shapes(cfg)[shape_name]
@@ -150,6 +165,10 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     if plan_override is not None:
         plan = plan_override
+    elif source != "baseline" and kind != "train":
+        # HAP is an inference planner; training shapes keep the baseline.
+        plan = _session_plan(cfg, mesh, seq, batch, kind, source, chip)
+        plan = adapt_plan_for_batch(plan, cfg, batch, kind)
     else:
         plan = make_plan(mesh, cfg, expert_mode=expert_mode,
                          attn_override=attn_mode, kv_shard=kv_shard)
@@ -211,8 +230,19 @@ def main() -> None:
     ap.add_argument("--kv-dtype", default="",
                     help="KV cache dtype override, e.g. float8_e4m3fn "
                          "(§Perf a)")
+    ap.add_argument("--source", default="baseline",
+                    choices=["baseline", "ilp", "tp", "ep"],
+                    help="strategy source for inference shapes: mesh "
+                         "baseline, the HAP ILP planner, or static TP/EP "
+                         "(bridged via HAPPlan.to_sharding_plan)")
+    ap.add_argument("--chip", default="a6000",
+                    help="hardware model for --source ilp planning")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+    if args.source != "baseline" and (args.expert_mode or args.attn_mode
+                                      or args.kv_shard):
+        ap.error("--expert-mode/--attn-mode/--kv-shard only apply to "
+                 "--source baseline (the strategy source decides layouts)")
 
     archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) \
         else [args.arch]
@@ -246,7 +276,8 @@ def main() -> None:
                         expert_mode=args.expert_mode,
                         attn_mode=args.attn_mode, kv_shard=args.kv_shard,
                         cfg_override=cfg_override,
-                        plan_override=plan_override)
+                        plan_override=plan_override,
+                        source=args.source, chip=args.chip)
                 except Exception as e:  # noqa: BLE001
                     failures.append((arch, shape, mp))
                     print(f"FAIL {arch} x {shape} multi_pod={mp}: {e}")

@@ -1,21 +1,32 @@
-"""Serving launcher: HAP-planned inference over the request scheduler.
+"""Serving launcher: adaptive HAP-planned inference over the scheduler.
+
+Demonstrates the ``HAPSession`` loop end to end: requests from two
+workload buckets (short-prompt and long-prompt) drain as separate
+batches; the engine re-plans per batch through the session's plan cache
+and logs the Eq.-6 transition at the bucket boundary.
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-moe-16b \
       --chip a6000 --devices 4 --prompt-len 512 --gen 32 --requests 8
+
+``--source`` swaps the strategy source: the ILP planner (default), the
+static TP/EP baselines, or a pinned plan via --plan
+"attn=TP4,prefill=EP4,decode=TP4".
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import logging
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import HAPPlanner, Workload
+from repro.core import HAPSession, Workload
 from repro.core.latency import cached_latency_model
+from repro.core.session import round_up
 from repro.models import init_params
-from repro.serving import InferenceEngine, Request
+from repro.serving import Request
 
 
 def main() -> None:
@@ -27,35 +38,68 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--source", default="ilp",
+                    choices=["ilp", "tp", "ep", "fixed"])
+    ap.add_argument("--plan", default="",
+                    help='pinned plan, e.g. "attn=TP4,prefill=EP4,decode=TP4"'
+                         " (implies --source fixed)")
+    ap.add_argument("--prompt-bucket", type=int, default=64,
+                    help="padding/planning bucket for prompt lengths")
+    ap.add_argument("--uniform", action="store_true",
+                    help="single workload bucket (disable the mixed "
+                         "short/long demo)")
     args = ap.parse_args()
+    logging.basicConfig(
+        level=logging.INFO, format="%(name)s: %(message)s")
 
     full_cfg = get_config(args.arch)
-    planner = HAPPlanner(full_cfg, args.chip, args.devices,
-                         model=cached_latency_model(args.chip))
-    w = Workload(batch=args.batch, prompt=args.prompt_len, gen=args.gen)
-    plan = planner.plan(w)
-    t_tp = planner.evaluate(planner.tp_plan(), w)
-    t_hap = planner.evaluate(plan, w)
+    if args.source == "fixed" and not args.plan:
+        ap.error("--source fixed requires --plan")
+    source = args.plan if args.plan else (
+        None if args.source == "ilp" else args.source)
+    session = HAPSession(full_cfg, args.chip, args.devices, source=source,
+                         model=cached_latency_model(args.chip),
+                         prompt_bucket=args.prompt_bucket,
+                         gen_bucket=max(args.gen, 1))
+
+    # mixed workloads: first half short prompts, second half long — two
+    # buckets, so the engine re-plans at the boundary. The long bucket is
+    # capped at --prompt-len (floored at one bucket + 1 so a second bucket
+    # always exists), and long lengths are drawn from long_hi's own bucket
+    # only (no straddle when --prompt-len is not a bucket multiple).
+    long_hi = min(args.prompt_bucket * 4,
+                  max(args.prompt_bucket + 1, args.prompt_len))
+
+    # headline prediction for the long-bucket workload actually served
+    w = Workload(batch=max(args.batch, 1),
+                 prompt=round_up(long_hi, args.prompt_bucket), gen=args.gen)
+    plan = session.plan_for(w)
     print(f"HAP: {plan.describe()}")
+    t_tp = session.planner.evaluate(session.planner.tp_plan(), w)
+    t_hap = session.planner.evaluate(plan, w)
     print(f"predicted speedup vs static TP: {t_tp / t_hap:.2f}x "
           f"(ILP {plan.ilp_time*1e3:.0f} ms)")
 
     # execution on local devices uses the reduced config (dev box)
     cfg = dataclasses.replace(full_cfg.reduced(), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = InferenceEngine(
-        cfg, params, hap_plan=plan, max_batch=args.batch,
-        use_int4_transition=plan.switches
-        and plan.mechanism == "int4_upload")
+    engine = session.engine(params, cfg=cfg, max_batch=args.batch)
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        n = int(rng.integers(8, min(64, args.prompt_len)))
+    for i in range(args.requests):
+        long_req = (not args.uniform) and i >= args.requests // 2
+        hi = long_hi if long_req else args.prompt_bucket
+        lo = max(1, (hi - 1) // args.prompt_bucket * args.prompt_bucket + 1)
+        n = int(rng.integers(lo, hi + 1))
         engine.submit(Request(prompt=rng.integers(
             1, cfg.vocab_size, n).tolist(), max_new_tokens=args.gen))
     done = engine.run()
     total_tok = sum(len(c.tokens) for c in done)
-    print(f"served {len(done)} requests, {total_tok} tokens "
-          f"(transition {done[0].transition_ms:.1f} ms)")
+    st = engine.stats
+    print(f"served {len(done)} requests, {total_tok} tokens in "
+          f"{st.batches} batches")
+    print(f"plan changes: {st.replans} (strategy switches "
+          f"{st.plan_switches}, cache hits {st.cache_hits}), "
+          f"transition total {st.transition_ms_total:.1f} ms")
 
 
 if __name__ == "__main__":

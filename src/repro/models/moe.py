@@ -30,6 +30,15 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from .common import activation_fn, glu_ffn
 
+# jax.shard_map (with check_vma) only exists in newer jax; older versions
+# ship it under jax.experimental with the check_rep spelling.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 class MoEOut(NamedTuple):
     y: jax.Array          # (B, S, d)
@@ -162,12 +171,12 @@ def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan):
         y = combine(y_buf, fe, pe, keep, fg, T_loc)
         return y, jax.lax.pmean(aux, ep_ax)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(dp_spec, P(None, None), P(ep_ax, None, None),
                   P(ep_ax, None, None), P(ep_ax, None, None)),
         out_specs=(dp_spec, P()),
-        check_vma=False)
+        **_SHARD_MAP_KW)
     y, aux = fn(x_flat, moe_p["router"], moe_p["wi_gate"],
                 moe_p["wi_up"], moe_p["wo"])
     return y, jnp.mean(aux)

@@ -237,7 +237,9 @@ def init_params(cfg: ModelConfig, key: jax.Array,
                                      is_leaf=lambda x: isinstance(x, tuple))
     keys = jax.random.split(key, len(flat))
 
-    paths = jax.tree.flatten_with_path(
+    # jax.tree.flatten_with_path only exists in newer jax; tree_util is
+    # stable across the versions we support.
+    paths = jax.tree_util.tree_flatten_with_path(
         shapes, is_leaf=lambda x: isinstance(x, tuple))[0]
 
     leaves = []

@@ -1,18 +1,23 @@
-"""HAP-integrated inference engine.
+"""HAP-integrated adaptive inference engine.
 
-The engine owns the full request lifecycle:
+The engine owns the full request lifecycle and — when bound to a
+``HAPSession`` — keeps the plan *adaptive across batches*:
 
-  1. On construction it asks the ``HAPPlanner`` for a plan matching the
-     workload (prompt length, expected output, batch) — or accepts a
-     static plan (the TP baseline).
+  1. ``FifoScheduler.next_batch()`` drains a bucket-homogeneous batch;
+     the engine asks the session for the plan matching that batch's
+     workload bucket (batch size, padded prompt length, output budget).
+     Cache hits reuse the earlier ILP solve; a bucket change triggers a
+     re-plan and — if the expert layouts differ — the Eq.-6 transition
+     between batches (direct reshard or INT4 host restore), logged via
+     ``repro.serving``.
   2. Prefill runs under the *prefill* expert strategy.
-  3. If the plan switches strategies (``plan.switches``), the expert
-     weights are transitioned before decoding via the mechanism the
-     Eq.-6 cost picked: direct resharding (``jax.device_put``) or the
-     INT4 per-group host backup (quantize once at load; dequantize into
-     the decode layout) — the paper's dynamic parallelism transition.
+  3. If the active plan switches strategies (``plan.switches``), the
+     expert weights are transitioned before decoding via the mechanism
+     the Eq.-6 cost picked — the paper's dynamic parallelism transition.
   4. Decode loops under the *decode* expert strategy.
 
+Without a session the engine is static: a fixed ``ShardingPlan`` and an
+optional pinned ``HAPPlan``, exactly the paper's baseline serving mode.
 On the CPU dev box the mesh is trivial, so "transition" degenerates to a
 numerical identity path — which the tests exploit to verify that serving
 through the INT4 backup matches direct serving within quantization
@@ -21,6 +26,7 @@ tolerance.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -29,18 +35,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.flops import Workload
 from repro.core.hap import HAPPlan, HAPPlanner
 from repro.core.transition import TransitionExecutor
 from repro.models import decode_step, prefill
 from .sampling import SamplingParams, sample
 from .scheduler import FifoScheduler, QueuedRequest
 
+log = logging.getLogger("repro.serving")
+
+_EXPERT_LEAVES = ("wi_gate", "wi_up", "wo")
+
 
 @dataclasses.dataclass
 class Request:
     prompt: Sequence[int]
     max_new_tokens: int = 32
-    sampling: SamplingParams = SamplingParams()
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
 
 
 @dataclasses.dataclass
@@ -52,35 +64,75 @@ class Completion:
     transition_ms: float
 
 
+@dataclasses.dataclass
+class EngineStats:
+    """Engine-level accounting (survives empty runs, unlike completions)."""
+    batches: int = 0
+    replans: int = 0          # batches whose active plan changed (the
+    #                           source ran only on the cache misses)
+    plan_switches: int = 0    # plan changes whose strategies differed
+    cache_hits: int = 0
+    transition_ms_total: float = 0.0
+    last_transition_ms: float = 0.0
+
+
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, *, plan=None,
+                 session=None,
                  hap: Optional[HAPPlanner] = None,
                  hap_plan: Optional[HAPPlan] = None,
-                 max_batch: int = 8, use_int4_transition: bool = False,
+                 max_batch: int = 8,
+                 use_int4_transition: Optional[bool] = None,
                  eos_id: int = -1):
         self.cfg = cfg
         self.params = params
-        self.plan = plan           # ShardingPlan (mesh layout) or None
+        self.plan = plan           # static ShardingPlan (mesh layout) or None
+        self.session = session     # HAPSession (adaptive mode) or None
         self.hap = hap
-        self.hap_plan = hap_plan
+        self.hap_plan = hap_plan   # active HAPPlan (pinned, or per-batch)
         self.eos_id = eos_id
-        self.scheduler = FifoScheduler(max_batch=max_batch)
+        bucket = session.prompt_bucket if session is not None else 64
+        self.scheduler = FifoScheduler(
+            max_batch=max_batch, bucket=bucket,
+            coalesce_buckets=session is not None)
         self.use_int4_transition = use_int4_transition
+        self.stats = EngineStats()
+        # False until a batch has executed under hap_plan: a pre-seeded
+        # plan (engine_from_hap) must count as the *initial* plan, not as
+        # a previous batch's layout to transition away from.
+        self._plan_ran = False
         self._tx = TransitionExecutor()
         if use_int4_transition and cfg.is_moe:
             self._backup_experts()
-        self._prefill_fn = jax.jit(
-            lambda p, b, ml: prefill(p, cfg, b, max_len=ml, plan=plan),
-            static_argnums=(2,))
-        self._decode_fn = jax.jit(
-            lambda p, t, c: decode_step(p, cfg, t, c, plan=plan))
+        self._fn_cache: Dict[Any, Any] = {}
 
-    # -- transition machinery ------------------------------------------------
+    # -- jit function cache ----------------------------------------------
+    def _fns(self, plan):
+        """(prefill_fn, decode_fn) jitted for one ShardingPlan."""
+        if plan not in self._fn_cache:
+            cfg = self.cfg
+            self._fn_cache[plan] = (
+                jax.jit(lambda p, b, ml: prefill(p, cfg, b, max_len=ml,
+                                                 plan=plan),
+                        static_argnums=(2,)),
+                jax.jit(lambda p, t, c: decode_step(p, cfg, t, c,
+                                                    plan=plan)))
+        return self._fn_cache[plan]
+
+    def _sharding_for(self, phase: str):
+        """Execution layout for a phase under the active plan."""
+        if (self.session is not None and self.session.mesh is not None
+                and self.hap_plan is not None):
+            return self.hap_plan.to_sharding_plan(
+                self.session.mesh, self.cfg, phase=phase)
+        return self.plan
+
+    # -- transition machinery --------------------------------------------
     def _expert_leaves(self) -> Dict[str, Any]:
         moe = self.params["layers"].get("moe")
         if moe is None:
             return {}
-        return {k: moe[k] for k in ("wi_gate", "wi_up", "wo")}
+        return {k: moe[k] for k in _EXPERT_LEAVES}
 
     def _backup_experts(self) -> None:
         for name, w in self._expert_leaves().items():
@@ -88,36 +140,114 @@ class InferenceEngine:
             # upload pipeline (Fig. 3: layer-wise async upload)
             self._tx.backup(f"moe/{name}", w)
 
-    def transition_expert_layout(self) -> float:
-        """Execute the prefill->decode expert-layout switch; returns ms.
+    def _relayout_experts(self, mechanism: str, sharding_plan) -> float:
+        """Move the expert weights to a new layout; returns ms.
 
-        With a live multi-device mesh this re-lays-out the expert weights
-        (device_put reshard, or INT4 host restore). The INT4 path replaces
-        the weights with their dequantized backup — numerically the
-        quantization round-trip the paper's Table I studies.
+        ``mechanism`` is ``reshard`` (device_put onto the target sharding;
+        identity on a null mesh) or ``int4_upload`` (restore the INT4
+        per-group host backup — Table I's quantization round-trip).
         """
-        if self.hap_plan is None or not self.hap_plan.switches:
+        if not self.cfg.is_moe or not self._expert_leaves():
             return 0.0
         t0 = time.perf_counter()
+        shardings: Dict[str, Any] = {}
+        if sharding_plan is not None and not getattr(
+                sharding_plan, "is_null", True):
+            from repro.models.params import param_pspecs
+            pspecs = param_pspecs(self.cfg, sharding_plan)["layers"]["moe"]
+            shardings = {n: sharding_plan.sharding(pspecs[n])
+                         for n in _EXPERT_LEAVES}
         moe = dict(self.params["layers"]["moe"])
-        for name in ("wi_gate", "wi_up", "wo"):
+        for name in _EXPERT_LEAVES:
             key = f"moe/{name}"
-            if self.use_int4_transition and key in self._tx._backups:
-                moe[name] = self._tx.restore(key, dtype=moe[name].dtype)
-            # else: direct reshard — with a mesh, device_put to the decode
-            # layout; on a null plan this is the identity.
+            if mechanism == "int4_upload":
+                if key not in self._tx._backups:
+                    self._tx.backup(key, moe[name])
+                moe[name] = self._tx.restore(key, sharding=shardings.get(name),
+                                             dtype=moe[name].dtype)
+            elif shardings.get(name) is not None:
+                moe[name] = self._tx.reshard(moe[name], shardings[name])
+            # else: direct reshard on a null plan — the identity.
         layers = dict(self.params["layers"])
         layers["moe"] = moe
         self.params = dict(self.params, layers=layers)
         return (time.perf_counter() - t0) * 1e3
 
-    # -- serving ---------------------------------------------------------------
+    def _plan_mechanism(self) -> str:
+        """INT4 vs reshard for the active plan's phase switch.
+
+        ``use_int4_transition`` is tri-state: None follows the plan's
+        Eq.-6 choice; True/False force the mechanism (False preserves the
+        legacy exact-weights opt-out — no lossy INT4 round trip)."""
+        if self.use_int4_transition is None:
+            return ("int4_upload"
+                    if self.hap_plan.mechanism == "int4_upload"
+                    else "reshard")
+        return "int4_upload" if self.use_int4_transition else "reshard"
+
+    def transition_expert_layout(self) -> float:
+        """Execute the prefill->decode expert-layout switch; returns ms."""
+        if self.hap_plan is None or not self.hap_plan.switches:
+            return 0.0
+        return self._relayout_experts(self._plan_mechanism(),
+                                      self._sharding_for("decode"))
+
+    def _restore_prefill_layout(self) -> float:
+        """Undo the previous batch's prefill->decode switch so a reused
+        switching plan prefills under its *prefill* layout again (the
+        reverse Eq.-6 move at the batch boundary); returns ms."""
+        if self.hap_plan is None or not self.hap_plan.switches:
+            return 0.0
+        return self._relayout_experts(self._plan_mechanism(),
+                                      self._sharding_for("prefill"))
+
+    # -- adaptive re-planning --------------------------------------------
+    def _activate_plan(self, batch_workload: Workload) -> float:
+        """Fetch/reuse the bucketed plan for this batch; run the Eq.-6
+        inter-batch transition when the active plan changes. Returns ms."""
+        hits0 = self.session.hits
+        new = self.session.plan_for(batch_workload)
+        self.stats.cache_hits += self.session.hits - hits0
+        old = self.hap_plan
+        bucket = self.session.bucket_of(batch_workload).describe()
+        if old is None or not self._plan_ran:
+            self.hap_plan = new
+            log.info("initial plan [%s]: %s", bucket, new.describe())
+            return 0.0
+        if new is old:
+            # same cached plan — but a switching plan left the experts in
+            # the decode layout after the previous batch; move them back.
+            return self._restore_prefill_layout()
+        self.hap_plan = new
+        self.stats.replans += 1
+        if (new.attn, new.expert_prefill, new.expert_decode) == \
+                (old.attn, old.expert_prefill, old.expert_decode):
+            log.info("re-planned [%s]: strategies unchanged (%s)",
+                     bucket, new.describe())
+            return self._restore_prefill_layout()
+        mech, predicted = self.session.transition_between(
+            old, new, batch_workload)
+        ms = 0.0
+        if mech != "none":
+            ms = self._relayout_experts(
+                mech, new.to_sharding_plan(
+                    self.session.mesh, self.cfg, phase="prefill")
+                if self.session.mesh is not None else self.plan)
+        self.stats.plan_switches += 1
+        log.info("plan switch [%s]: %s -> %s via %s "
+                 "(%.1f ms, predicted %.1f ms)",
+                 bucket, old.describe(), new.describe(), mech, ms,
+                 predicted * 1e3)
+        return ms
+
+    # -- serving -----------------------------------------------------------
     def submit(self, req: Request) -> int:
         return self.scheduler.submit(req.prompt, req.max_new_tokens)
 
-    def run(self, sampling: SamplingParams = SamplingParams()
+    def run(self, sampling: Optional[SamplingParams] = None
             ) -> List[Completion]:
         """Drain the queue; returns completions in uid order."""
+        sampling = sampling if sampling is not None else SamplingParams()
         out: List[Completion] = []
         while True:
             batch = self.scheduler.next_batch()
@@ -132,15 +262,26 @@ class InferenceEngine:
         B, S = toks.shape
         max_new = max(r.max_new_tokens for r in batch)
         max_len = S + max_new + 1
+        self.stats.batches += 1
+
+        inter_ms = 0.0
+        if self.session is not None:
+            inter_ms = self._activate_plan(
+                Workload(batch=B, prompt=S, gen=max_new))
+        self._plan_ran = True
+        prefill_fn, _ = self._fns(self._sharding_for("prefill"))
 
         t0 = time.perf_counter()
-        logits, cache = self._prefill_fn(self.params,
-                                         {"tokens": jnp.asarray(toks)},
-                                         max_len)
+        logits, cache = prefill_fn(self.params,
+                                   {"tokens": jnp.asarray(toks)},
+                                   max_len)
         logits.block_until_ready()
         prefill_ms = (time.perf_counter() - t0) * 1e3
 
-        transition_ms = self.transition_expert_layout()
+        transition_ms = inter_ms + self.transition_expert_layout()
+        self.stats.transition_ms_total += transition_ms
+        self.stats.last_transition_ms = transition_ms
+        _, decode_fn = self._fns(self._sharding_for("decode"))
 
         key = jax.random.PRNGKey(sampling.seed)
         generated = np.zeros((B, max_new), np.int32)
@@ -153,8 +294,7 @@ class InferenceEngine:
             if step == max_new - 1:
                 break
             key, sub = jax.random.split(key)
-            logits, cache = self._decode_fn(self.params,
-                                            next_tok[:, None], cache)
+            logits, cache = decode_fn(self.params, next_tok[:, None], cache)
             next_tok = sample(logits, sampling, sub)
             if self.eos_id >= 0:
                 done |= np.asarray(next_tok) == self.eos_id
@@ -175,13 +315,21 @@ class InferenceEngine:
 def engine_from_hap(cfg: ModelConfig, params, chip: str, n_devices: int,
                     prompt_len: int, gen_len: int, batch: int,
                     model=None, plan=None) -> InferenceEngine:
-    """Convenience: plan with HAP, then build the engine accordingly."""
+    """Legacy convenience — now a thin wrapper over ``HAPSession.engine``.
+
+    Prefer building a ``HAPSession`` directly: it keeps the planner and
+    the bucketed plan cache alive across engine runs.
+    """
     from repro.core.flops import Workload
-    planner = HAPPlanner(cfg, chip, n_devices, model=model)
-    hap_plan = planner.plan(Workload(batch=batch, prompt=prompt_len,
-                                     gen=gen_len))
-    return InferenceEngine(
-        cfg, params, plan=plan, hap=planner, hap_plan=hap_plan,
-        max_batch=batch,
-        use_int4_transition=(hap_plan.switches
-                             and hap_plan.mechanism == "int4_upload"))
+    from repro.core.session import HAPSession
+    # prompt_bucket stays at the legacy 64-token padding granularity —
+    # per-batch re-planning adapts to the actual prompt lengths anyway.
+    session = HAPSession(cfg, chip, n_devices, model=model,
+                         prompt_bucket=64, gen_bucket=max(gen_len, 1))
+    eng = session.engine(params, max_batch=batch)
+    eng.plan = plan
+    # legacy contract: plan eagerly for the stated workload so hap_plan is
+    # readable before the first run (batches still re-plan adaptively).
+    eng.hap_plan = session.plan_for(
+        Workload(batch=batch, prompt=prompt_len, gen=gen_len))
+    return eng

@@ -5,6 +5,12 @@ what the paper evaluates): requests queue up, the scheduler drains up to
 ``max_batch`` of them, left-pads prompts to a shared bucket length, runs
 prefill once and decodes the whole batch in lockstep until every request
 hits its stop condition.
+
+With ``coalesce_buckets=True`` (the adaptive-serving default) a batch only
+spans requests whose prompts land in the *same* padding bucket: mixed
+workloads then drain as a sequence of homogeneous batches, and the engine
+re-plans (HAPSession plan cache) whenever the bucket changes between
+batches — the serving loop the paper's adaptivity claim asks for.
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ from collections import deque
 from typing import Deque, List, Optional, Sequence
 
 import numpy as np
+
+from repro.core.session import round_up
 
 
 @dataclasses.dataclass
@@ -23,9 +31,11 @@ class QueuedRequest:
 
 
 class FifoScheduler:
-    def __init__(self, max_batch: int = 8, bucket: int = 64):
+    def __init__(self, max_batch: int = 8, bucket: int = 64,
+                 coalesce_buckets: bool = False):
         self.max_batch = max_batch
-        self.bucket = bucket
+        self.bucket = max(1, bucket)
+        self.coalesce_buckets = coalesce_buckets
         self._q: Deque[QueuedRequest] = deque()
         self._next_uid = 0
 
@@ -39,22 +49,36 @@ class FifoScheduler:
     def __len__(self) -> int:
         return len(self._q)
 
+    def prompt_bucket(self, r: QueuedRequest) -> int:
+        """Padded length this request's prompt lands in (>= one bucket)."""
+        return round_up(max(len(r.prompt), 1), self.bucket)
+
     def next_batch(self) -> Optional[List[QueuedRequest]]:
         if not self._q:
             return None
-        batch = []
+        batch = [self._q.popleft()]
+        b0 = self.prompt_bucket(batch[0])
         while self._q and len(batch) < self.max_batch:
+            if (self.coalesce_buckets
+                    and self.prompt_bucket(self._q[0]) != b0):
+                break
             batch.append(self._q.popleft())
         return batch
 
     def pad_batch(self, batch: List[QueuedRequest], pad_id: int = 0):
-        """Left-pad to a bucket multiple. Returns (tokens (B, S), lengths)."""
+        """Left-pad to a bucket multiple. Returns (tokens (B, S), lengths).
+
+        S is always at least one bucket (empty prompts pad to a full
+        bucket) and exactly ``max_len`` when the longest prompt sits on a
+        bucket boundary.
+        """
         max_len = max(len(r.prompt) for r in batch)
-        S = int(np.ceil(max_len / self.bucket) * self.bucket)
+        S = round_up(max(max_len, 1), self.bucket)
         B = len(batch)
         toks = np.full((B, S), pad_id, np.int32)
         lens = np.zeros((B,), np.int32)
         for i, r in enumerate(batch):
-            toks[i, S - len(r.prompt):] = r.prompt
+            if len(r.prompt):
+                toks[i, S - len(r.prompt):] = r.prompt
             lens[i] = len(r.prompt)
         return toks, lens

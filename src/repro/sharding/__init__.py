@@ -1,1 +1,2 @@
-from .specs import ShardingPlan, make_plan  # noqa: F401
+from .specs import (NULL_PLAN, ShardingPlan,  # noqa: F401
+                    adapt_plan_for_batch, make_plan, strategy_sharding_plan)

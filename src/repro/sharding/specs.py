@@ -134,13 +134,17 @@ class ShardingPlan:
 NULL_PLAN = ShardingPlan()
 
 
-def make_plan(mesh: Optional[Mesh], cfg, *, attn_override: str = "",
-              expert_mode: str = "", kv_shard: str = "") -> ShardingPlan:
-    """Derive the default (baseline) plan for a config on a mesh.
+def _resolve_plan(mesh: Optional[Mesh], cfg, *, want_attn_tp: bool,
+                  want_ep: bool, attn_override: str = "",
+                  expert_mode: str = "", kv_shard: str = "") -> ShardingPlan:
+    """Shared mode-resolution core (DESIGN.md §5).
 
-    The HAP planner (core/hap.py) produces strategy names; this translates
-    them into a mesh-legal ``ShardingPlan``. Overrides let the dry-run /
-    perf loop force specific layouts.
+    Given the *intent* (attention wants its heads on the TP axis / experts
+    want the EP layout), legality-check it against the mesh's model-axis
+    size and fall back to the replicated / TP modes when the dimensions
+    don't divide. Both the baseline ``make_plan`` and the HAP bridge
+    ``HAPPlan.to_sharding_plan`` funnel through here so the mapping rules
+    live in exactly one place.
     """
     if mesh is None:
         return NULL_PLAN
@@ -151,7 +155,8 @@ def make_plan(mesh: Optional[Mesh], cfg, *, attn_override: str = "",
 
     # attention mode legality
     heads_ok = cfg.has_attention and cfg.num_heads % tp == 0
-    attn_mode = attn_override or ("tp_heads" if heads_ok else "replicated")
+    attn_mode = attn_override or (
+        "tp_heads" if (want_attn_tp and heads_ok) else "replicated")
     if attn_mode == "tp_heads" and not heads_ok:
         attn_mode = "replicated"
 
@@ -163,13 +168,10 @@ def make_plan(mesh: Optional[Mesh], cfg, *, attn_override: str = "",
             kv_shard = "seq"
 
     # expert / ffn mode
+    ep_ok = cfg.is_moe and cfg.n_routed_experts % tp == 0
     if not expert_mode:
-        if cfg.is_moe and cfg.n_routed_experts % tp == 0:
-            expert_mode = "ep"
-        else:
-            expert_mode = "tp"
-    if expert_mode == "ep" and (not cfg.is_moe
-                                or cfg.n_routed_experts % tp != 0):
+        expert_mode = "ep" if (want_ep and ep_ok) else "tp"
+    if expert_mode == "ep" and not ep_ok:
         expert_mode = "tp"
 
     return ShardingPlan(
@@ -182,6 +184,38 @@ def make_plan(mesh: Optional[Mesh], cfg, *, attn_override: str = "",
         ffn_tp_axis=model_ax,
         ep_axis=model_ax if expert_mode == "ep" else None,
     )
+
+
+def strategy_sharding_plan(mesh: Optional[Mesh], cfg, attn,
+                           expert) -> ShardingPlan:
+    """Map HAP strategy degrees onto mesh axes (the planner→mesh bridge).
+
+    ``attn`` is an ``AttnStrategy`` (A_d, A_t) and ``expert`` an
+    ``ExpertStrategy`` (E_t, E_e) from ``repro.core.strategy``. On a fixed
+    mesh a degree becomes an *axis assignment*: attention-TP puts heads on
+    the model axis (``tp_heads``) while attention-DP leaves the attention
+    weights replicated and the model axis parallelizes only the FFN side;
+    expert-EP puts the expert dimension on the model axis, expert-TP the
+    expert d_ff. Callers should reach this through
+    ``HAPPlan.to_sharding_plan`` rather than directly.
+    """
+    return _resolve_plan(mesh, cfg,
+                         want_attn_tp=attn.tp > 1,
+                         want_ep=expert.ep > 1)
+
+
+def make_plan(mesh: Optional[Mesh], cfg, *, attn_override: str = "",
+              expert_mode: str = "", kv_shard: str = "") -> ShardingPlan:
+    """Default (baseline) plan for a config on a mesh — internal helper.
+
+    Thin wrapper over ``_resolve_plan`` preferring TP-heads attention and
+    EP experts wherever legal. Planner output should go through
+    ``HAPPlan.to_sharding_plan`` instead; this remains for static-baseline
+    exploration (dry-run overrides) and legacy tests.
+    """
+    return _resolve_plan(mesh, cfg, want_attn_tp=True, want_ep=True,
+                         attn_override=attn_override,
+                         expert_mode=expert_mode, kv_shard=kv_shard)
 
 
 def adapt_plan_for_batch(plan: ShardingPlan, cfg, batch: int,

@@ -14,7 +14,7 @@ import numpy as np
 
 
 def _flatten_with_names(tree) -> Tuple[list, Any]:
-    paths = jax.tree.flatten_with_path(tree)[0]
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
     treedef = jax.tree.structure(tree)
     names, leaves = [], []
     for path, leaf in paths:

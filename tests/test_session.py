@@ -1,0 +1,390 @@
+"""HAPSession / PlanSource API: the planning→execution bridge.
+
+Covers the strategy→mesh bridge (``HAPPlan.to_sharding_plan``) on 1-, 2-
+and 4-device meshes for a MoE and a dense config, the bucketed plan
+cache, scheduler padding edge cases, and per-batch adaptive re-planning
+in the engine. Multi-device meshes are built in a subprocess with forced
+host devices so the main pytest process keeps its single real device.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core import (FixedPlanSource, HAPSession, StaticPlanSource,
+                        Workload, WorkloadBucket, fixed_plan)
+from repro.core.hap import HAPPlan
+from repro.core.strategy import AttnStrategy, ExpertStrategy
+from repro.serving import Request
+from repro.serving.scheduler import FifoScheduler
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# strategy parsing / fixed plans
+# ---------------------------------------------------------------------------
+def test_strategy_parse_round_trip():
+    for s in (AttnStrategy(4, 1), AttnStrategy(1, 4), AttnStrategy(2, 2)):
+        assert AttnStrategy.parse(s.name) == s
+    for e in (ExpertStrategy(tp=4, ep=1), ExpertStrategy(tp=1, ep=4),
+              ExpertStrategy(tp=2, ep=2)):
+        assert ExpertStrategy.parse(e.name) == e
+    with pytest.raises(ValueError):
+        AttnStrategy.parse("EP4")
+    with pytest.raises(ValueError):
+        ExpertStrategy.parse("DP2")
+    with pytest.raises(ValueError):
+        AttnStrategy.parse("TP0")          # degree must be >= 1
+    with pytest.raises(ValueError):
+        AttnStrategy.parse("TP2xTP4")      # duplicate axis
+
+
+def test_fixed_plan_builder():
+    plan = fixed_plan("DP2xTP2", "EP4", "TP4")
+    assert plan.attn == AttnStrategy(dp=2, tp=2)
+    assert plan.switches and plan.mechanism == "reshard"
+    same = fixed_plan("TP4", "EP4")
+    assert not same.switches and same.mechanism == "none"
+
+
+# ---------------------------------------------------------------------------
+# the strategy→mesh bridge
+# ---------------------------------------------------------------------------
+def test_to_sharding_plan_null_mesh():
+    plan = fixed_plan("TP4", "EP4", "TP4")
+    cfg = reduced("deepseek-moe-16b")
+    assert plan.to_sharding_plan(None, cfg).is_null
+
+
+def test_to_sharding_plan_single_device_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    moe = reduced("deepseek-moe-16b")
+    dense = reduced("mistral-nemo-12b")
+    sp = fixed_plan("TP4", "EP4").to_sharding_plan(mesh, moe,
+                                                   phase="prefill")
+    assert sp.mesh is mesh and sp.attn_tp_axis == "model"
+    assert sp.ffn_mode == "ep"     # E % 1 == 0: EP legal on a 1-wide axis
+    sp_d = fixed_plan("DP4", "TP4").to_sharding_plan(mesh, dense)
+    assert sp_d.ffn_mode == "tp"   # dense never gets EP
+    assert sp_d.attn_mode == "replicated"  # attention-DP: no heads on axis
+
+
+def test_to_sharding_plan_phase_selects_expert_layout():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced("deepseek-moe-16b")
+    plan = fixed_plan("TP4", "EP4", "TP4")
+    assert plan.to_sharding_plan(mesh, cfg, phase="prefill").ffn_mode == "ep"
+    assert plan.to_sharding_plan(mesh, cfg, phase="decode").ffn_mode == "tp"
+    with pytest.raises(ValueError):
+        plan.to_sharding_plan(mesh, cfg, phase="train")
+
+
+def test_make_plan_is_thin_wrapper_over_resolver():
+    from repro.sharding.specs import make_plan, strategy_sharding_plan
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = reduced("deepseek-moe-16b")
+    base = make_plan(mesh, cfg)
+    bridged = strategy_sharding_plan(mesh, cfg, AttnStrategy(1, 4),
+                                     ExpertStrategy(tp=1, ep=4))
+    assert base == bridged
+
+
+def test_to_sharding_plan_multidevice_meshes():
+    """Round-trip the bridge on 2- and 4-device meshes, MoE and dense."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    code = textwrap.dedent("""
+        import dataclasses, jax
+        from jax.sharding import NamedSharding
+        from repro.configs import get_config
+        from repro.core.hap import fixed_plan
+
+        def red(name):
+            return dataclasses.replace(get_config(name).reduced(),
+                                       dtype='float32')
+        moe, dense = red('deepseek-moe-16b'), red('mistral-nemo-12b')
+        plan = fixed_plan('DP2xTP2', 'EP4', 'TP4')
+        for shape in ((1, 2), (2, 2), (1, 4)):
+            mesh = jax.make_mesh(shape, ('data', 'model'))
+            tp = shape[1]
+            for cfg in (moe, dense):
+                for phase in ('prefill', 'decode'):
+                    sp = plan.to_sharding_plan(mesh, cfg, phase=phase)
+                    assert sp.mesh is mesh
+                    assert sp.attn_tp_axis == 'model'
+                    # legality: tp_heads only when heads divide the axis
+                    if sp.attn_mode == 'tp_heads':
+                        assert cfg.num_heads % tp == 0
+                    if sp.ffn_mode == 'ep':
+                        assert cfg.is_moe and phase == 'prefill'
+                        assert cfg.n_routed_experts % tp == 0
+                    if sp.kv_shard == 'heads':
+                        assert cfg.num_kv_heads % tp == 0
+                    # the plan must hand out mesh-legal shardings
+                    NamedSharding(mesh, sp.kv_cache_spec())
+                    NamedSharding(mesh, sp.act_btd())
+        print('OK')
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# bucketed plan cache
+# ---------------------------------------------------------------------------
+class _CountingSource:
+    def __init__(self, plan=None):
+        self.calls = []
+        self.plan = plan or fixed_plan("TP1", "TP1")
+
+    def plan_for(self, w):
+        self.calls.append(w)
+        return dataclasses.replace(self.plan)   # fresh object per solve
+
+
+def _stub_session(cfg, source, prompt_bucket=32, gen_bucket=16):
+    return HAPSession(cfg, "a6000", 1, source=source,
+                      prompt_bucket=prompt_bucket, gen_bucket=gen_bucket)
+
+
+def test_bucket_of_rounds_up_to_edges():
+    cfg = reduced("deepseek-moe-16b")
+    s = _stub_session(cfg, _CountingSource())
+    assert s.bucket_of(Workload(4, 1, 1)) == WorkloadBucket(4, 32, 16)
+    assert s.bucket_of(Workload(4, 32, 16)) == WorkloadBucket(4, 32, 16)
+    assert s.bucket_of(Workload(4, 33, 17)) == WorkloadBucket(4, 64, 32)
+    assert s.bucket_of(Workload(2, 0, 0)) == WorkloadBucket(2, 32, 0)
+
+
+def test_plan_cache_hit_and_miss():
+    cfg = reduced("deepseek-moe-16b")
+    src = _CountingSource()
+    s = _stub_session(cfg, src)
+    p1 = s.plan_for(Workload(4, 10, 8))
+    p2 = s.plan_for(Workload(4, 30, 12))    # same bucket (32, 16)
+    assert p1 is p2 and len(src.calls) == 1
+    assert (s.hits, s.misses) == (1, 1)
+    s.plan_for(Workload(4, 40, 8))          # prompt bucket 64 -> miss
+    s.plan_for(Workload(2, 10, 8))          # batch differs -> miss
+    assert len(src.calls) == 3
+    assert (s.hits, s.misses) == (1, 3)
+    # solved workloads are the bucket edges, not the raw workloads
+    assert src.calls[0].prompt == 32 and src.calls[0].gen == 16
+
+
+def test_source_one_liners():
+    cfg = reduced("deepseek-moe-16b")
+    pinned = fixed_plan("TP2", "EP2")
+    s = HAPSession(cfg, "a6000", 2, source=pinned)
+    assert s.plan_for(Workload(1, 8, 8)) is pinned
+    s2 = HAPSession(cfg, "a6000", 2, source=FixedPlanSource(pinned))
+    assert s2.plan_for(Workload(1, 8, 8)) is pinned
+    s3 = HAPSession(cfg, "a6000", 2, source="attn=TP2,prefill=EP2,decode=TP2")
+    got = s3.plan_for(Workload(1, 8, 8))
+    assert got.expert_prefill == ExpertStrategy(tp=1, ep=2)
+    assert got.switches
+    with pytest.raises(ValueError):
+        StaticPlanSource(object(), kind="dp")
+
+
+def test_malformed_source_spec_raises_not_falls_back():
+    """A bad pinned-plan spec must surface, not masquerade as ILP
+    infeasibility and silently serve the static fallback."""
+    cfg = reduced("deepseek-moe-16b")
+    for spec in ("attn=TP4;prefill=EP4",   # bad separator
+                 "atn=TP4,prefill=EP4",    # typo'd key
+                 "TP4"):                   # missing key=value shape
+        s = HAPSession(cfg, "a6000", 2, source=spec)
+        with pytest.raises(ValueError):
+            s.plan_for(Workload(1, 8, 8))
+
+
+# ---------------------------------------------------------------------------
+# scheduler padding / bucketing edge cases
+# ---------------------------------------------------------------------------
+def test_pad_batch_exact_bucket_boundary():
+    sch = FifoScheduler(max_batch=4, bucket=8)
+    sch.submit(list(range(1, 9)))            # exactly one bucket
+    toks, lens = sch.pad_batch(sch.next_batch())
+    assert toks.shape == (1, 8) and lens[0] == 8
+    assert list(toks[0]) == list(range(1, 9))
+
+
+def test_pad_batch_single_and_mixed_lengths():
+    sch = FifoScheduler(max_batch=4, bucket=8)
+    sch.submit([5])                          # single short request
+    sch.submit(list(range(1, 12)))           # 11 tokens -> bucket 16
+    toks, lens = sch.pad_batch(sch.next_batch())
+    assert toks.shape == (2, 16)
+    assert list(lens) == [1, 11]
+    assert toks[0, -1] == 5 and all(toks[0, :-1] == 0)   # left-padded
+    assert list(toks[1, -11:]) == list(range(1, 12))
+
+
+def test_pad_batch_empty_prompt_pads_full_bucket():
+    sch = FifoScheduler(max_batch=2, bucket=8)
+    sch.submit([])
+    toks, lens = sch.pad_batch(sch.next_batch())
+    assert toks.shape == (1, 8) and lens[0] == 0
+
+
+def test_coalesce_buckets_splits_mixed_workloads():
+    sch = FifoScheduler(max_batch=8, bucket=8, coalesce_buckets=True)
+    for n in (4, 6, 20, 22, 5):
+        sch.submit(list(range(1, n + 1)))
+    b1 = sch.next_batch()
+    b2 = sch.next_batch()
+    b3 = sch.next_batch()
+    assert [len(b) for b in (b1, b2, b3)] == [2, 2, 1]
+    assert sch.next_batch() is None
+    # without coalescing everything drains in one FIFO batch
+    sch2 = FifoScheduler(max_batch=8, bucket=8)
+    for n in (4, 6, 20, 22, 5):
+        sch2.submit(list(range(1, n + 1)))
+    assert len(sch2.next_batch()) == 5
+
+
+# ---------------------------------------------------------------------------
+# adaptive engine: per-batch re-planning
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_replans_per_bucket(moe_setup):
+    cfg, params = moe_setup
+    src = _CountingSource()
+    session = _stub_session(cfg, src, prompt_bucket=16, gen_bucket=8)
+    engine = session.engine(params, cfg=cfg, max_batch=4)
+    assert engine.scheduler.coalesce_buckets
+    assert engine.scheduler.bucket == 16
+    for n in (6, 8, 30, 28):                 # two prompt buckets
+        engine.submit(Request(prompt=list(range(1, n + 1)),
+                              max_new_tokens=4))
+    out = engine.run()
+    assert len(out) == 4 and all(len(c.tokens) == 4 for c in out)
+    assert engine.stats.batches == 2
+    assert engine.stats.replans == 1         # bucket change -> re-plan
+    # the stub hands out identical strategies, so no *switch* is counted
+    assert engine.stats.plan_switches == 0
+    assert len(src.calls) == 2               # one ILP-equivalent per bucket
+    assert {w.prompt for w in src.calls} == {16, 32}
+
+
+def test_engine_reuses_cached_plan_across_runs(moe_setup):
+    cfg, params = moe_setup
+    src = _CountingSource()
+    session = _stub_session(cfg, src, prompt_bucket=16, gen_bucket=8)
+    engine = session.engine(params, cfg=cfg, max_batch=2)
+    for _ in range(2):
+        engine.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+        engine.run()
+    assert len(src.calls) == 1               # second run hits the cache
+    assert engine.stats.cache_hits >= 1
+    assert engine.stats.replans == 0         # same plan object throughout
+
+
+def test_engine_runs_interbatch_transition(moe_setup):
+    """A plan switch whose layouts differ must execute the Eq.-6 weight
+    move between batches (INT4 restore on the int4_upload mechanism)."""
+    cfg, params = moe_setup
+
+    class _TwoPlanSource:
+        def __init__(self):
+            self.plans = [fixed_plan("TP1", "EP2", "EP2"),
+                          fixed_plan("TP1", "TP2", "TP2")]
+
+        def plan_for(self, w):
+            return self.plans.pop(0)
+
+    session = _stub_session(cfg, _TwoPlanSource(), prompt_bucket=16,
+                            gen_bucket=8)
+    # stub the planner-backed Eq.-6 scoring: layouts differ -> int4 path
+    session.transition_between = lambda old, new, w: ("int4_upload", 0.001)
+    engine = session.engine(params, cfg=cfg, max_batch=2)
+    engine.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    engine.submit(Request(prompt=list(range(1, 25)), max_new_tokens=4))
+    out = engine.run()
+    assert len(out) == 2
+    assert engine.stats.replans == 1
+    assert engine.stats.plan_switches == 1   # EP2 -> TP2 really switched
+    assert engine.stats.transition_ms_total > 0.0
+    # the INT4 path lazily backed up and restored the expert weights
+    assert any(k.startswith("moe/") for k in engine._tx._backups)
+
+
+def test_cached_switching_plan_restores_prefill_layout(moe_setup):
+    """A reused switching plan must move the experts BACK to the prefill
+    layout at the next batch boundary — otherwise every batch after the
+    first prefills under the decode layout."""
+    cfg, params = moe_setup
+    plan = fixed_plan("TP1", "EP2", "TP2", mechanism="int4_upload")
+    session = _stub_session(cfg, _CountingSource(plan), prompt_bucket=16,
+                            gen_bucket=8)
+    engine = session.engine(params, cfg=cfg, max_batch=1)
+    for _ in range(2):
+        engine.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    out = engine.run()
+    assert len(out) == 2 and engine.stats.batches == 2
+    # batch 1: prefill->decode switch; batch 2: restore + switch again
+    assert out[0].transition_ms > 0.0
+    assert out[1].transition_ms > 0.0
+
+
+def test_scheduler_padding_lands_on_session_bucket_edges():
+    """pad_batch shapes must be fixed points of the session's bucketing —
+    the plan-cache key is computed from the padded shape."""
+    cfg = reduced("deepseek-moe-16b")
+    s = _stub_session(cfg, _CountingSource(), prompt_bucket=32)
+    sch = FifoScheduler(max_batch=1, bucket=32)
+    for n in (1, 31, 32, 33, 100):
+        sch.submit(list(range(n)))
+        toks, _ = sch.pad_batch(sch.next_batch())
+        S = toks.shape[1]
+        assert s.bucket_of(Workload(1, S, 8)).prompt == S
+
+
+def test_use_int4_false_keeps_exact_weights(moe_setup):
+    """Explicit use_int4_transition=False must opt OUT of the lossy INT4
+    round trip even when the plan's mechanism says int4_upload: on a null
+    mesh the reshard path is the identity, so greedy outputs match a
+    plain engine exactly."""
+    cfg, params = moe_setup
+    from repro.serving import InferenceEngine
+    plan = fixed_plan("TP1", "EP2", "TP2", mechanism="int4_upload")
+    direct = InferenceEngine(cfg, params, max_batch=1)
+    direct.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=6))
+    want = direct.run()[0].tokens
+    eng = InferenceEngine(cfg, params, max_batch=1, hap_plan=plan,
+                          use_int4_transition=False)
+    eng.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=6))
+    got = eng.run()[0].tokens
+    assert got == want
+    assert not eng._tx._backups       # INT4 machinery never engaged
+
+
+def test_request_sampling_default_not_shared():
+    r1, r2 = Request(prompt=[1]), Request(prompt=[2])
+    assert r1.sampling is not r2.sampling
+
+
+def test_engine_stats_survive_empty_run(moe_setup):
+    cfg, params = moe_setup
+    engine = _stub_session(cfg, _CountingSource()).engine(
+        params, cfg=cfg, max_batch=2)
+    assert engine.run() == []
+    assert engine.stats.batches == 0
+    assert engine.stats.transition_ms_total == 0.0
