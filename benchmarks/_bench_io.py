@@ -1,0 +1,11 @@
+"""Benchmark result I/O: JSON artifacts for the CI perf trajectory."""
+
+import json
+
+
+def write_bench_json(path, payload):
+    """Write a benchmark payload as a pretty-printed JSON artifact."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -5,13 +5,11 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
 
-import jax
 
 from repro.configs import get_config
 from repro.data import synthetic_lm_data
-from repro.models import init_params
 from repro.serving import InferenceEngine, Request
-from repro.training.train_loop import init_train_state, train_loop
+from repro.training.train_loop import train_loop
 
 
 def main():

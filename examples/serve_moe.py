@@ -61,6 +61,20 @@ def main():
           f"cache_hits={st.cache_hits} "
           f"transition_total={st.transition_ms_total:.1f}ms")
 
+    # the same trace through continuous batching (DESIGN.md §4b): mixed
+    # output budgets, so short requests retire mid-stream and queued ones
+    # join their freed slots at decode-step boundaries instead of waiting
+    # for the whole lockstep batch to drain.
+    for n, gen in ((12, 4), (20, 24), (70, 4), (80, 24), (90, 4), (75, 8)):
+        engine.submit(Request(
+            prompt=rng.integers(1, cfg.vocab_size, n).tolist(),
+            max_new_tokens=gen))
+    comps = engine.serve_continuous()
+    st = engine.stats
+    print(f"continuous: {len(comps)} requests, "
+          f"{sum(len(c.tokens) for c in comps)} tokens via "
+          f"{st.joins} joins over {st.decode_steps} decode steps")
+
 
 if __name__ == "__main__":
     main()

@@ -5,7 +5,6 @@ Run:  PYTHONPATH=src python examples/train_small.py --steps 200
 (CPU: ~5-10 s/step at the default sizes; lower --steps for a smoke run.)
 """
 import argparse
-import dataclasses
 
 import jax
 

@@ -20,7 +20,7 @@ The SAME surfaces play two roles:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

@@ -18,8 +18,7 @@ A brute-force cross-check lives in the tests.
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -13,7 +13,11 @@ API:
   - ``sharding_plan(workload, phase)`` bridges the chosen plan onto the
     mesh via ``HAPPlan.to_sharding_plan``,
   - ``engine(params, ...)`` builds an ``InferenceEngine`` that re-plans
-    per scheduler batch and runs the Eq.-6 transition between batches.
+    per scheduler batch and runs the Eq.-6 transition between batches —
+    or, through ``engine.serve_continuous()``, re-plans at decode-time
+    *admission* on the live workload bucket (active batch size × max
+    padded prompt × max output budget), so transitions also fire
+    mid-stream (DESIGN.md §4b).
 
 Strategy *sources* are pluggable via the ``PlanSource`` protocol: the ILP
 planner, the static TP/EP baselines, and user-pinned plans are one-liner

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import List, Tuple
+from typing import List
 
 from repro.configs.base import ModelConfig
 

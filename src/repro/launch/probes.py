@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.models.io import INPUT_SHAPES, input_specs
+from repro.models.io import INPUT_SHAPES
 from repro.models.params import abstract_params, param_pspecs
 from repro.models import transformer as T
 from repro.launch import roofline

@@ -11,6 +11,11 @@ and logs the Eq.-6 transition at the bucket boundary.
 ``--source`` swaps the strategy source: the ILP planner (default), the
 static TP/EP baselines, or a pinned plan via --plan
 "attn=TP4,prefill=EP4,decode=TP4".
+
+``--continuous`` serves the same trace through the continuous-batching
+loop (decode-time joins, DESIGN.md §4b) instead of lockstep static
+batches: re-planning then hooks at admission time on the live workload
+bucket, and join/retire events are logged per request.
 """
 from __future__ import annotations
 
@@ -48,6 +53,9 @@ def main() -> None:
     ap.add_argument("--uniform", action="store_true",
                     help="single workload bucket (disable the mixed "
                          "short/long demo)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (decode-time joins) instead "
+                         "of lockstep static batches")
     args = ap.parse_args()
     logging.basicConfig(
         level=logging.INFO, format="%(name)s: %(message)s")
@@ -92,11 +100,16 @@ def main() -> None:
         n = int(rng.integers(lo, hi + 1))
         engine.submit(Request(prompt=rng.integers(
             1, cfg.vocab_size, n).tolist(), max_new_tokens=args.gen))
-    done = engine.run()
+    done = engine.serve_continuous() if args.continuous else engine.run()
     total_tok = sum(len(c.tokens) for c in done)
     st = engine.stats
-    print(f"served {len(done)} requests, {total_tok} tokens in "
-          f"{st.batches} batches")
+    if args.continuous:
+        print(f"served {len(done)} requests, {total_tok} tokens: "
+              f"{st.joins} joins over {st.decode_steps} decode steps "
+              f"({st.batches} live-batch generations)")
+    else:
+        print(f"served {len(done)} requests, {total_tok} tokens in "
+              f"{st.batches} batches")
     print(f"plan changes: {st.replans} (strategy switches "
           f"{st.plan_switches}, cache hits {st.cache_hits}), "
           f"transition total {st.transition_ms_total:.1f} ms")

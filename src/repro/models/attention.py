@@ -9,7 +9,6 @@ algorithm and is validated against ``repro.kernels.ref``).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -52,27 +51,36 @@ def qkv_project(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
 
 def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, cfg: ModelConfig,
                is_global, kv_len: Optional[jax.Array] = None) -> jax.Array:
-    """Additive mask bias of shape (Sq, Sk) in f32.
+    """Additive mask bias in f32: (Sq, Sk), or (B, Sq, Sk) per-row.
 
     - causal models: k_pos <= q_pos
     - sliding window (when ``is_global`` is False): q_pos - k_pos < window
     - encoder-only (cfg.causal False): full bidirectional
     - kv_len: valid-length bound for decode (k_pos < kv_len)
+
+    ``q_pos`` is (Sq,) shared across the batch, or (B, Sq) per-row — the
+    continuous-batching decode path, where in-flight requests sit at
+    different depths. ``kv_len`` is likewise a scalar or (B,).
     """
-    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    qp = q_pos[..., :, None]                        # (..., Sq, 1)
+    ok = jnp.ones(qp.shape[:-1] + k_pos.shape, dtype=bool)
     if cfg.causal:
-        ok = k_pos[None, :] <= q_pos[:, None]
+        ok = k_pos <= qp
         if cfg.sliding_window > 0:
-            in_win = (q_pos[:, None] - k_pos[None, :]) < cfg.sliding_window
+            in_win = (qp - k_pos) < cfg.sliding_window
             win_ok = ok & in_win
             ok = jnp.where(is_global, ok, win_ok)
     if kv_len is not None:
-        ok = ok & (k_pos[None, :] < kv_len)
+        kl = jnp.asarray(kv_len)
+        if kl.ndim:
+            kl = kl[:, None, None]                  # (B, 1, 1)
+        ok = ok & (k_pos < kl)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
 def _sdpa_chunk(q, k, v, bias, cfg: ModelConfig):
-    """q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd), bias (Sq,Sk) -> (out, row_max, row_sum).
+    """q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd), bias (Sq,Sk) or (B,Sq,Sk)
+    -> (out, row_max, row_sum).
 
     GQA: q heads grouped over kv heads. Returns unnormalized output plus the
     online-softmax statistics so callers can combine across KV chunks.
@@ -85,7 +93,8 @@ def _sdpa_chunk(q, k, v, bias, cfg: ModelConfig):
                         k.astype(jnp.float32)) * _scale(cfg)
     if cfg.attn_logit_softcap > 0:
         logits = softcap(logits, cfg.attn_logit_softcap)
-    logits = logits + bias[None, None, None, :, :]
+    logits = logits + (bias[None, None, None, :, :] if bias.ndim == 2
+                       else bias[:, None, None, :, :])
     m = jnp.max(logits, axis=-1)                      # (B,Hkv,G,Sq)
     p = jnp.exp(logits - m[..., None])
     s = jnp.sum(p, axis=-1)                           # (B,Hkv,G,Sq)
@@ -105,6 +114,8 @@ def full_attention(q, k, v, cfg: ModelConfig, is_global,
 
     Shapes: q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd). Returns (B,Sq,Hq,hd).
     Memory: O(Sq * kv_chunk) score tiles instead of O(Sq * Sk).
+    ``q_positions`` may be (Sq,) or per-row (B,Sq), and ``kv_len`` a
+    scalar or per-row (B,) — see ``_mask_bias``.
     """
     B, Sq, Hq, hd = q.shape
     Sk = k.shape[1]
@@ -213,7 +224,12 @@ def prefill_kv(x: jax.Array, w: AttnTemps, cfg: ModelConfig):
 def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
                      is_global, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, plan) -> tuple:
-    """One-token decode. x: (B, 1, d); caches (B, Smax, Hkv, hd); pos scalar.
+    """One-token decode. x: (B, 1, d); caches (B, Smax, Hkv, hd).
+
+    ``pos`` is a scalar (lockstep batch: every row decodes at the same
+    depth) or a (B,) vector (continuous batching: each row sits at its
+    own depth — RoPE angles, cache writes and validity masks are all
+    per-row; see DESIGN.md §4b).
 
     Returns (out (B,1,d), new_k_cache, new_v_cache). The new token's K/V are
     written at ``pos``; attention runs over the full cache with a validity
@@ -223,17 +239,28 @@ def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
     B = x.shape[0]
     q, k_new, v_new = qkv_project(x, w, cfg, pos[None, None]
                                   if pos.ndim == 0 else pos[:, None])
-    k_cache = jax.lax.dynamic_update_slice(
-        k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    if pos.ndim:
+        # per-row scatter: row i writes its token's K/V at pos[i]. Rows
+        # whose pos is out of range (drained slots) write nowhere.
+        write = (jnp.arange(k_cache.shape[1], dtype=jnp.int32)[None, :]
+                 == pos[:, None])                      # (B, Smax)
+        k_cache = jnp.where(write[:, :, None, None],
+                            k_new.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(write[:, :, None, None],
+                            v_new.astype(v_cache.dtype), v_cache)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
     if plan is not None and not plan.is_null:
         k_cache = plan.constrain(k_cache, plan.cache_spec_bshd())
         v_cache = plan.constrain(v_cache, plan.cache_spec_bshd())
 
     Smax = k_cache.shape[1]
     k_positions = jnp.arange(Smax, dtype=jnp.int32)
-    q_positions = jnp.full((1,), 0, jnp.int32) + pos
+    q_positions = (pos[:, None] if pos.ndim
+                   else jnp.full((1,), 0, jnp.int32) + pos)
     out = full_attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
                          cfg, is_global, q_positions, k_positions,
                          kv_len=pos + 1, kv_chunk=max(Smax, 1))

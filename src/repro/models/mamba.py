@@ -115,7 +115,6 @@ def init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaCache:
 def mamba_decode_step(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig,
                       cache: MambaCache) -> Tuple[jax.Array, MambaCache]:
     """One-token recurrent step. x: (B, 1, d) -> (B, 1, d), new cache."""
-    B = x.shape[0]
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     x_in, z = jnp.split(xz, 2, axis=-1)                # (B, 1, di)
 

@@ -14,7 +14,6 @@ Public entry points:
 from __future__ import annotations
 
 import contextlib
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -53,7 +52,9 @@ class DecodeCache(NamedTuple):
     v: Optional[jax.Array]
     conv: Optional[jax.Array]  # (L, B, cw-1, d_inner)
     ssm: Optional[jax.Array]   # (L, B, d_inner, N) float32
-    pos: jax.Array             # scalar int32 — tokens written so far
+    pos: jax.Array             # int32 tokens written so far: scalar for a
+    #                            lockstep batch, (B,) per-row under
+    #                            continuous batching (DESIGN.md §4b)
 
 
 # ---------------------------------------------------------------------------
@@ -370,10 +371,44 @@ def _mamba_final_state(h, mp, cfg: ModelConfig, chunk: int = 256):
 # ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
+def merge_cache_rows(cache: DecodeCache, sub: DecodeCache,
+                     rows) -> DecodeCache:
+    """Copy ``sub``'s batch rows into ``cache`` at slot indices ``rows``.
+
+    The decode-time join (DESIGN.md §4b): a freshly prefilled request's
+    cache rows — KV and mamba conv/ssm state — replace the freed slots of
+    the live decode cache. ``sub`` must have been allocated at the same
+    ``max_len`` as ``cache``. When ``cache.pos`` is a per-row vector the
+    joined rows' positions are set from ``sub.pos``; a scalar ``pos``
+    (lockstep batch) is left to the caller.
+    """
+    idx = jnp.asarray(rows, jnp.int32)
+
+    def put(dst, src):
+        if dst is None:
+            return None
+        return dst.at[:, idx].set(src.astype(dst.dtype))
+
+    new = cache._replace(
+        k=put(cache.k, sub.k), v=put(cache.v, sub.v),
+        conv=put(cache.conv, sub.conv), ssm=put(cache.ssm, sub.ssm))
+    if cache.pos.ndim:
+        new = new._replace(
+            pos=cache.pos.at[idx].set(
+                jnp.broadcast_to(sub.pos, idx.shape).astype(jnp.int32)))
+    return new
+
+
 def decode_step(params, cfg: ModelConfig, token: jax.Array,
                 cache: DecodeCache, plan=None
                 ) -> Tuple[jax.Array, DecodeCache]:
-    """One decode step. token: (B, 1) int32 -> (logits (B, V), new cache)."""
+    """One decode step. token: (B, 1) int32 -> (logits (B, V), new cache).
+
+    ``cache.pos`` may be a scalar (lockstep) or a (B,) vector (continuous
+    batching); either way the returned cache has ``pos + 1`` — callers
+    that freeze drained rows (the continuous engine) re-pin ``pos``
+    before the next step.
+    """
     assert cfg.causal
     x = embed_tokens(params, cfg, token)
     if plan is not None and not plan.is_null:

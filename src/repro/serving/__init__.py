@@ -1,4 +1,4 @@
 from .engine import (Completion, EngineStats,  # noqa: F401
                      InferenceEngine, Request, engine_from_hap)
-from .scheduler import FifoScheduler  # noqa: F401
+from .scheduler import ContinuousScheduler, FifoScheduler  # noqa: F401
 from .sampling import SamplingParams  # noqa: F401

@@ -22,6 +22,20 @@ On the CPU dev box the mesh is trivial, so "transition" degenerates to a
 numerical identity path — which the tests exploit to verify that serving
 through the INT4 backup matches direct serving within quantization
 tolerance.
+
+Two serving loops share the engine (DESIGN.md §4/§4b):
+
+  ``run()``              — static batching: a batch admitted together
+                           decodes in lockstep until every request stops.
+  ``serve_continuous()`` — continuous batching: an in-flight decode set
+                           with per-request state (position, KV length,
+                           stop status); queued requests join at
+                           decode-step boundaries (``admit``), decode one
+                           step per iteration (``step_decode``) and free
+                           their slot on completion (``retire``).
+                           Re-planning hooks at admission time on the
+                           *live* workload bucket, so Eq.-6 transitions
+                           fire mid-stream.
 """
 from __future__ import annotations
 
@@ -37,10 +51,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.flops import Workload
 from repro.core.hap import HAPPlan, HAPPlanner
+from repro.core.session import round_up
 from repro.core.transition import TransitionExecutor
-from repro.models import decode_step, prefill
+from repro.models import decode_step, init_cache, merge_cache_rows, prefill
 from .sampling import SamplingParams, sample
-from .scheduler import FifoScheduler, QueuedRequest
+from .scheduler import ContinuousScheduler, QueuedRequest
 
 log = logging.getLogger("repro.serving")
 
@@ -67,13 +82,47 @@ class Completion:
 @dataclasses.dataclass
 class EngineStats:
     """Engine-level accounting (survives empty runs, unlike completions)."""
-    batches: int = 0
+    batches: int = 0          # static batches / continuous live-batch
+    #                           generations (cache allocations)
     replans: int = 0          # batches whose active plan changed (the
     #                           source ran only on the cache misses)
     plan_switches: int = 0    # plan changes whose strategies differed
     cache_hits: int = 0
     transition_ms_total: float = 0.0
     last_transition_ms: float = 0.0
+    joins: int = 0            # continuous: requests admitted mid-stream
+    decode_steps: int = 0     # continuous: decode steps executed
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Per-request in-flight decode state (one live batch row)."""
+    req: QueuedRequest
+    start: int                # padded prompt length = first decode position
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False        # decode-sampled EOS seen
+    prefill_ms: float = 0.0
+    transition_ms: float = 0.0
+    decode_ms: float = 0.0
+
+
+@dataclasses.dataclass
+class _LiveBatch:
+    """The in-flight decode set: a fixed-slot cache plus per-slot state.
+
+    ``pos`` is the host-side source of truth for per-row decode depth;
+    it is re-pinned into the cache before every step so drained slots
+    stay frozen while live rows advance.
+    """
+    kv_capacity: int
+    slots: List[Optional[_Slot]]
+    cache: Any = None                  # DecodeCache, allocated on 1st admit
+    pos: Optional[np.ndarray] = None   # (nslots,) int32
+    next_tok: Optional[np.ndarray] = None  # (nslots,) int32
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.done]
 
 
 class InferenceEngine:
@@ -92,7 +141,7 @@ class InferenceEngine:
         self.hap_plan = hap_plan   # active HAPPlan (pinned, or per-batch)
         self.eos_id = eos_id
         bucket = session.prompt_bucket if session is not None else 64
-        self.scheduler = FifoScheduler(
+        self.scheduler = ContinuousScheduler(
             max_batch=max_batch, bucket=bucket,
             coalesce_buckets=session is not None)
         self.use_int4_transition = use_int4_transition
@@ -105,19 +154,29 @@ class InferenceEngine:
         if use_int4_transition and cfg.is_moe:
             self._backup_experts()
         self._fn_cache: Dict[Any, Any] = {}
+        self._live: Optional[_LiveBatch] = None
 
     # -- jit function cache ----------------------------------------------
-    def _fns(self, plan):
-        """(prefill_fn, decode_fn) jitted for one ShardingPlan."""
-        if plan not in self._fn_cache:
+    def _fns(self, plan, slots: Optional[int] = None):
+        """(prefill_fn, decode_fn) jitted for one ShardingPlan.
+
+        ``slots`` keys the continuous-batching decode entry separately
+        per live-batch slot count: the continuous loop always decodes the
+        *full* slot set (frees included) so the decode shape is constant
+        across joins/retires, and returning to a previously-seen
+        (plan, slot count) pair never recompiles — the recompile-storm
+        guard for decode-time joins.
+        """
+        key = (plan, slots)
+        if key not in self._fn_cache:
             cfg = self.cfg
-            self._fn_cache[plan] = (
+            self._fn_cache[key] = (
                 jax.jit(lambda p, b, ml: prefill(p, cfg, b, max_len=ml,
                                                  plan=plan),
                         static_argnums=(2,)),
                 jax.jit(lambda p, t, c: decode_step(p, cfg, t, c,
                                                     plan=plan)))
-        return self._fn_cache[plan]
+        return self._fn_cache[key]
 
     def _sharding_for(self, phase: str):
         """Execution layout for a phase under the active plan."""
@@ -309,6 +368,178 @@ class InferenceEngine:
                         if t != self.eos_id or self.eos_id < 0]
             comps.append(Completion(r.uid, toks_out, prefill_ms,
                                     decode_ms, transition_ms))
+        return comps
+
+    # -- continuous batching: decode-time joins ---------------------------
+    def serve_continuous(self, sampling: Optional[SamplingParams] = None
+                         ) -> List[Completion]:
+        """Drain the queue with continuous batching; uid-ordered completions.
+
+        Each iteration admits whatever fits into freed slots (``admit``),
+        runs ONE decode step over the full slot set (``step_decode``) and
+        frees finished rows (``retire``) — short requests no longer idle
+        behind long ones. Greedy outputs match per-request solo runs
+        exactly: every request is prefilled at its own prompt bucket, so
+        its padding — and hence its numerics — is identical to a solo
+        run (stochastic sampling draws an independent per-request key
+        chain and is not comparable across the two loops). See
+        DESIGN.md §4b for the admit/step/retire state machine.
+        """
+        sampling = sampling if sampling is not None else SamplingParams()
+        key = jax.random.PRNGKey(sampling.seed)
+        out: List[Completion] = []
+        while len(self.scheduler) or self._live is not None:
+            if self._live is None:
+                self._begin_live_batch()
+            self.admit(sampling)
+            out.extend(self.retire())    # zero/one-token budgets end here
+            if not self._live.active():
+                # nothing runnable: the queue head (if any) outgrows this
+                # generation's KV capacity — drain and resize.
+                self._live = None
+                continue
+            key, sub = jax.random.split(key)
+            self.step_decode(sampling, sub)
+            out.extend(self.retire())
+        return sorted(out, key=lambda c: c.uid)
+
+    def _begin_live_batch(self) -> None:
+        """Size a fresh live batch from the current queue: KV capacity is
+        the largest queued request's need (padded prompt + output budget
+        + 1), rounded up to the padding bucket so repeat capacities hit
+        the same jit cache entry."""
+        sch = self.scheduler
+        need = max(sch.kv_need(r) for r in sch.queued())
+        self._live = _LiveBatch(
+            kv_capacity=round_up(need, sch.bucket),
+            slots=[None] * sch.max_batch,
+            pos=np.zeros((sch.max_batch,), np.int32),
+            next_tok=np.zeros((sch.max_batch,), np.int32))
+        self.stats.batches += 1
+        log.info("live batch: %d slots, KV capacity %d tokens",
+                 sch.max_batch, self._live.kv_capacity)
+
+    def admit(self, sampling: SamplingParams) -> List[int]:
+        """Admit queue-head requests into freed slots at a step boundary.
+
+        Strict head-of-line FIFO: each fitting head is prefilled at its
+        own prompt bucket and left-aligned into the lowest free slot.
+        Every admission re-buckets the *live* workload (active rows ×
+        max padded prompt × max output budget) through the session, so a
+        plan switch — and its Eq.-6 reshard/INT4-restore transition —
+        fires mid-stream when the workload class changes. Returns the
+        joined slot indices.
+        """
+        live = self._live
+        joined: List[int] = []
+        while True:
+            free = [i for i, s in enumerate(live.slots) if s is None]
+            if not free:
+                break
+            r = self.scheduler.next_fit(live.kv_capacity)
+            if r is None:
+                break
+            self._admit_one(free[0], r, sampling)
+            joined.append(free[0])
+        return joined
+
+    def _admit_one(self, i: int, r: QueuedRequest,
+                   sampling: SamplingParams) -> None:
+        live = self._live
+        slot = _Slot(req=r, start=self.scheduler.prompt_bucket(r))
+        live.slots[i] = slot
+        self.stats.joins += 1
+
+        inter_ms = 0.0
+        if self.session is not None:
+            rows = [s for s in live.slots if s is not None]
+            inter_ms = self._activate_plan(Workload(
+                batch=len(rows),
+                prompt=max(s.start for s in rows),
+                gen=max(s.req.max_new_tokens for s in rows)))
+        self._plan_ran = True
+
+        # prefill alone at this request's own bucket (B=1: a bounded set
+        # of prefill shapes, and numerics identical to a solo run)
+        prefill_fn, _ = self._fns(self._sharding_for("prefill"))
+        toks, _ = self.scheduler.pad_batch([r])
+        t0 = time.perf_counter()
+        logits, sub_cache = prefill_fn(self.params,
+                                       {"tokens": jnp.asarray(toks)},
+                                       live.kv_capacity)
+        logits.block_until_ready()
+        slot.prefill_ms = (time.perf_counter() - t0) * 1e3
+
+        slot.transition_ms = inter_ms + self.transition_expert_layout()
+        self.stats.transition_ms_total += slot.transition_ms
+        self.stats.last_transition_ms = slot.transition_ms
+
+        if live.cache is None:
+            n = len(live.slots)
+            live.cache = init_cache(
+                self.cfg, n, live.kv_capacity,
+                dtype=self.params["embed"].dtype,
+                plan=self._sharding_for("decode"))
+            live.cache = live.cache._replace(pos=jnp.zeros((n,), jnp.int32))
+        live.cache = merge_cache_rows(live.cache, sub_cache, [i])
+
+        tok0 = int(np.asarray(sample(
+            logits, sampling,
+            jax.random.fold_in(jax.random.PRNGKey(sampling.seed),
+                               r.uid)))[0])
+        live.pos[i] = slot.start
+        live.next_tok[i] = tok0
+        if r.max_new_tokens >= 1:
+            slot.tokens.append(tok0)
+        log.info("join uid=%d slot=%d start=%d (queued %d)",
+                 r.uid, i, slot.start, len(self.scheduler))
+
+    def step_decode(self, sampling: SamplingParams, key=None) -> None:
+        """One decode step over the FULL slot set (freed/done rows are
+        frozen host-side): constant decode shapes per (plan, slot count),
+        so joins and retirements never trigger a recompile."""
+        live = self._live
+        active = live.active()
+        _, decode_fn = self._fns(self._sharding_for("decode"),
+                                 slots=len(live.slots))
+        cache = live.cache._replace(pos=jnp.asarray(live.pos))
+        t0 = time.perf_counter()
+        logits, live.cache = decode_fn(self.params,
+                                       jnp.asarray(live.next_tok)[:, None],
+                                       cache)
+        toks = np.asarray(sample(logits, sampling, key))
+        step_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.decode_steps += 1
+        for i in active:
+            s = live.slots[i]
+            live.pos[i] += 1
+            s.decode_ms += step_ms
+            t = int(toks[i])
+            live.next_tok[i] = t
+            if self.eos_id >= 0 and t == self.eos_id:
+                s.done = True       # stop; EOS is never emitted
+                continue
+            s.tokens.append(t)
+
+    def retire(self) -> List[Completion]:
+        """Free slots whose request hit EOS or its output budget; returns
+        their completions (KV rows are reused by the next join)."""
+        live = self._live
+        comps: List[Completion] = []
+        if live is None:
+            return comps
+        for i, s in enumerate(live.slots):
+            if s is None or not (s.done
+                                 or len(s.tokens) >= s.req.max_new_tokens):
+                continue
+            toks = [t for t in s.tokens
+                    if t != self.eos_id or self.eos_id < 0]
+            comps.append(Completion(s.req.uid, toks, s.prefill_ms,
+                                    s.decode_ms, s.transition_ms))
+            live.slots[i] = None
+            live.next_tok[i] = 0
+            log.info("retire uid=%d slot=%d (%d tokens)",
+                     s.req.uid, i, len(toks))
         return comps
 
 

@@ -11,6 +11,13 @@ spans requests whose prompts land in the *same* padding bucket: mixed
 workloads then drain as a sequence of homogeneous batches, and the engine
 re-plans (HAPSession plan cache) whenever the bucket changes between
 batches — the serving loop the paper's adaptivity claim asks for.
+
+``ContinuousScheduler`` extends the FIFO with decode-time admission
+(continuous batching, DESIGN.md §4b): the engine asks for the queue head
+at decode-step boundaries and admits it into a freed batch slot when its
+KV need fits the live cache. Admission is strict head-of-line FIFO —
+later requests never jump an unadmittable head, so completion order
+tracks submission order.
 """
 from __future__ import annotations
 
@@ -53,13 +60,29 @@ class FifoScheduler:
         """Padded length this request's prompt lands in (>= one bucket)."""
         return round_up(max(len(r.prompt), 1), self.bucket)
 
+    def peek(self) -> Optional[QueuedRequest]:
+        """The queue head, without removing it (None when empty)."""
+        return self._q[0] if self._q else None
+
+    def queued(self) -> List[QueuedRequest]:
+        """Snapshot of the queue in submission order."""
+        return list(self._q)
+
     def next_batch(self) -> Optional[List[QueuedRequest]]:
+        """Drain up to ``max_batch`` requests from the queue head.
+
+        Peek-then-pop: every request is inspected (bucket check) *before*
+        it leaves the queue, so a failed coalesce leaves the remaining
+        queue untouched and in submission order — a popleft-then-inspect
+        loop would have to re-insert rejected requests and could reorder
+        them ahead of earlier submissions.
+        """
         if not self._q:
             return None
-        batch = [self._q.popleft()]
-        b0 = self.prompt_bucket(batch[0])
+        b0 = self.prompt_bucket(self._q[0])
+        batch: List[QueuedRequest] = []
         while self._q and len(batch) < self.max_batch:
-            if (self.coalesce_buckets
+            if (batch and self.coalesce_buckets
                     and self.prompt_bucket(self._q[0]) != b0):
                 break
             batch.append(self._q.popleft())
@@ -82,3 +105,29 @@ class FifoScheduler:
                 toks[i, S - len(r.prompt):] = r.prompt
             lens[i] = len(r.prompt)
         return toks, lens
+
+
+class ContinuousScheduler(FifoScheduler):
+    """FIFO queue with decode-time admission (continuous batching).
+
+    The continuous engine calls ``next_fit`` at decode-step boundaries:
+    the queue head is admitted — popped, prefilled at its own prompt
+    bucket and left-aligned into a freed slot — only when its KV need
+    (padded prompt + output budget + 1) fits the live cache's sequence
+    capacity. A head that does not fit blocks the queue until the live
+    batch drains and a fresh cache is sized for it (strict FIFO — no
+    reordering). Requests with *different* prompt buckets coexist in one
+    live batch: each row keeps its own padded start position, so
+    ``coalesce_buckets`` only governs the static ``next_batch`` path.
+    """
+
+    def kv_need(self, r: QueuedRequest) -> int:
+        """Cache rows this request needs: padded prompt + gen budget + 1."""
+        return self.prompt_bucket(r) + max(r.max_new_tokens, 1) + 1
+
+    def next_fit(self, kv_capacity: int) -> Optional[QueuedRequest]:
+        """Pop the queue head iff it fits ``kv_capacity``, else None."""
+        head = self.peek()
+        if head is None or self.kv_need(head) > kv_capacity:
+            return None
+        return self._q.popleft()

@@ -1,7 +1,6 @@
 """AdamW + cosine schedule in pure JAX (no optax dependency offline)."""
 from __future__ import annotations
 
-import math
 from typing import Any, NamedTuple
 
 import jax

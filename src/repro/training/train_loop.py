@@ -5,7 +5,6 @@ import time
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import loss_and_aux

@@ -10,8 +10,7 @@ import pytest
 
 from conftest import reduced
 from repro.configs import ASSIGNED_ARCHS
-from repro.models import (decode_step, init_params, loss_and_aux,
-                          make_batch, prefill)
+from repro.models import decode_step, init_params, make_batch, prefill
 from repro.models.transformer import embed_inputs, forward_hidden, unembed
 from repro.training.train_loop import init_train_state, make_train_step
 

@@ -1,0 +1,187 @@
+"""Continuous batching: decode-time joins in the adaptive engine.
+
+Covers the admit/step/retire state machine (DESIGN.md §4b): mid-stream
+admission preserves per-request greedy outputs exactly vs running each
+request alone, retirement frees slots for later joins, a forced workload
+bucket change mid-stream triggers exactly one plan transition, and the
+per-row-position decode primitive matches the lockstep scalar path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core import HAPSession
+from repro.core.hap import fixed_plan
+from repro.models import decode_step, init_params, prefill
+from repro.serving import Request
+from repro.serving.scheduler import ContinuousScheduler, FifoScheduler
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    # capacity_factor is raised so MoE token dropping cannot couple batch
+    # rows — the precondition for token-exact solo equivalence
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _session(cfg, source=None, prompt_bucket=16, gen_bucket=8):
+    return HAPSession(cfg, "a6000", 1,
+                      source=source or fixed_plan("TP1", "TP1"),
+                      prompt_bucket=prompt_bucket, gen_bucket=gen_bucket)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: peek-first batching + head-of-line admission
+# ---------------------------------------------------------------------------
+def test_next_batch_peeks_before_popping():
+    """A failed coalesce must leave the rest of the queue untouched and
+    in submission order (regression: popleft-then-inspect)."""
+    sch = FifoScheduler(max_batch=8, bucket=8, coalesce_buckets=True)
+    uids = [sch.submit(list(range(1, n + 1))) for n in (4, 20, 6, 5)]
+    b1 = sch.next_batch()
+    assert [r.uid for r in b1] == [uids[0]]          # bucket break at 20
+    assert [r.uid for r in sch.queued()] == uids[1:]  # order preserved
+    assert [r.uid for r in sch.next_batch()] == [uids[1]]
+    assert [r.uid for r in sch.next_batch()] == [uids[2], uids[3]]
+    assert sch.next_batch() is None
+
+
+def test_peek_does_not_mutate():
+    sch = FifoScheduler(max_batch=2, bucket=8)
+    assert sch.peek() is None
+    uid = sch.submit([1, 2, 3])
+    assert sch.peek().uid == uid and len(sch) == 1
+
+
+def test_next_fit_head_of_line_blocking():
+    """An unadmittable head blocks the queue — later requests never jump
+    ahead of it, and nothing is popped on a failed fit."""
+    sch = ContinuousScheduler(max_batch=4, bucket=8)
+    sch.submit(list(range(1, 31)), max_new_tokens=8)   # needs 32+8+1
+    sch.submit([1, 2], max_new_tokens=2)               # needs 8+2+1
+    assert sch.next_fit(16) is None
+    assert len(sch) == 2
+    got = sch.next_fit(64)
+    assert got is not None and len(got.prompt) == 30
+    assert sch.next_fit(16) is not None                # now the head fits
+
+
+# ---------------------------------------------------------------------------
+# per-row decode positions (the model-level join primitive)
+# ---------------------------------------------------------------------------
+def test_vector_pos_decode_matches_scalar(moe_setup):
+    cfg, params = moe_setup
+    toks = jnp.asarray(np.arange(1, 17, dtype=np.int32).reshape(2, 8))
+    logits, cache = prefill(params, cfg, {"tokens": toks}, max_len=16)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    l_scalar, c_s = decode_step(params, cfg, tok, cache)
+    c_vec = cache._replace(pos=jnp.full((2,), cache.pos, jnp.int32))
+    l_vec, c_v = decode_step(params, cfg, tok, c_vec)
+    np.testing.assert_allclose(np.asarray(l_scalar), np.asarray(l_vec),
+                               rtol=1e-5, atol=1e-5)
+    assert c_v.pos.shape == (2,) and int(c_v.pos[0]) == int(c_s.pos)
+    np.testing.assert_allclose(np.asarray(c_s.k), np.asarray(c_v.k),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the continuous serving loop
+# ---------------------------------------------------------------------------
+def test_midstream_join_matches_solo_runs(moe_setup):
+    """Mid-stream admission must preserve per-request greedy outputs
+    token for token vs running each request alone."""
+    cfg, params = moe_setup
+    reqs = [([3, 1, 4, 1, 5, 9, 2, 6, 5, 3], 8),
+            ([2, 7, 1, 8, 2, 8], 3),
+            ([1, 1, 2, 3, 5, 8, 13, 2, 1, 4, 7, 11], 6)]
+    solo = {}
+    for uid, (p, g) in enumerate(reqs):
+        eng = _session(cfg).engine(params, max_batch=1)
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+        solo[uid] = eng.run()[0].tokens
+
+    eng = _session(cfg).engine(params, max_batch=2)
+    for p, g in reqs:
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+    comps = eng.serve_continuous()
+    assert {c.uid: c.tokens for c in comps} == solo
+    # uid=2 joined mid-stream: uid=1 retired first while uid=0 decoded on
+    assert eng.stats.joins == 3
+    assert eng.stats.batches == 1            # one live-batch generation
+    # overlap: fewer steps than the lockstep loop's max-of-batch drain
+    assert eng.stats.decode_steps < (8 - 1) + (6 - 1)
+
+
+def test_retirement_frees_slots_for_later_joins(moe_setup):
+    cfg, params = moe_setup
+    eng = _session(cfg).engine(params, max_batch=1)
+    for n, g in ((4, 5), (7, 4)):
+        eng.submit(Request(prompt=list(range(1, n + 1)), max_new_tokens=g))
+    comps = eng.serve_continuous()
+    assert [len(c.tokens) for c in comps] == [5, 4]
+    # both served through the SAME single slot of one live generation
+    assert eng.stats.batches == 1 and eng.stats.joins == 2
+    assert eng._live is None                 # fully drained
+
+
+def test_continuous_without_session(moe_setup):
+    """The plain (session-less) engine serves continuously too: fixed
+    null plan, default 64-token bucket."""
+    cfg, params = moe_setup
+    from repro.serving import InferenceEngine
+    eng = InferenceEngine(cfg, params, max_batch=2)
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    eng.submit(Request(prompt=[4, 5], max_new_tokens=2))
+    comps = eng.serve_continuous()
+    assert [len(c.tokens) for c in comps] == [4, 2]
+
+
+def test_forced_bucket_change_triggers_one_transition(moe_setup):
+    """A join that moves the live workload into a new prompt bucket must
+    re-plan and fire exactly one Eq.-6 plan transition mid-stream."""
+    cfg, params = moe_setup
+
+    class _BucketSource:
+        """Short bucket -> TP plan; long bucket -> EP plan."""
+
+        def __init__(self):
+            self.short = fixed_plan("TP1", "TP1")
+            self.long = fixed_plan("TP1", "EP2", "EP2")
+
+        def plan_for(self, w):
+            return self.short if w.prompt <= 16 else self.long
+
+    session = _session(cfg, source=_BucketSource())
+    # stub the planner-backed Eq.-6 scoring (no fitted latency model)
+    session.transition_between = lambda old, new, w: ("reshard", 0.0)
+    eng = session.engine(params, max_batch=2)
+    eng.submit(Request(prompt=list(range(1, 11)), max_new_tokens=6))
+    eng.submit(Request(prompt=list(range(1, 13)), max_new_tokens=9))
+    eng.submit(Request(prompt=list(range(1, 21)), max_new_tokens=4))
+    comps = eng.serve_continuous()
+    assert [len(c.tokens) for c in comps] == [6, 9, 4]
+    # admissions 1+2 share the short-bucket plan (one miss, one hit of a
+    # different batch bucket -> same object, no switch); the long join
+    # re-buckets the live workload and switches TP -> EP exactly once
+    assert eng.stats.plan_switches == 1
+    assert eng.stats.replans == 1
+
+
+def test_continuous_honors_eos(moe_setup):
+    """A decode-sampled EOS retires the row early; EOS never appears in
+    the completion (same contract as the lockstep loop)."""
+    cfg, params = moe_setup
+    eng = _session(cfg).engine(params, max_batch=1)
+    eng.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=8))
+    want = eng.serve_continuous()[0].tokens
+    assert len(want) == 8
+    # re-serve with eos_id set to the first *decoded* token: the row must
+    # stop right after it and drop the EOS itself
+    eng2 = _session(cfg).engine(params, max_batch=1, eos_id=want[1])
+    eng2.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=8))
+    got = eng2.serve_continuous()[0].tokens
+    assert got == [t for t in want[:2] if t != want[1]]

@@ -1,6 +1,5 @@
 """Mamba mixer: chunked associative scan vs sequential reference;
 decode-step recurrence vs full-sequence forward."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 
 Uses a session-cached LatencyModel (fitting takes ~1 min/chip on 1 core).
 """
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -2,19 +2,18 @@
 import numpy as np
 import pytest
 
+from repro.core.ilp import HapIlp
+from repro.core.quantization import dequantize_int4, quantize_int4
+from repro.core.flops import Workload, ep_imbalance
+from repro.core.comm import layer_comm_bytes
+from repro.core.strategy import attention_strategies, expert_strategies
+from repro.configs import get_config
+
 pytest.importorskip(
     "hypothesis",
     reason="property tests need hypothesis (pip install -r "
            "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
-
-from repro.core.ilp import HapIlp
-from repro.core.quantization import dequantize_int4, quantize_int4
-from repro.core.flops import Workload, ep_imbalance
-from repro.core.comm import layer_comm_bytes
-from repro.core.strategy import (AttnStrategy, ExpertStrategy,
-                                 attention_strategies, expert_strategies)
-from repro.configs import get_config
 
 
 @settings(max_examples=30, deadline=None)

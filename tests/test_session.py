@@ -13,13 +13,11 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 
 from conftest import reduced
 from repro.core import (FixedPlanSource, HAPSession, StaticPlanSource,
                         Workload, WorkloadBucket, fixed_plan)
-from repro.core.hap import HAPPlan
 from repro.core.strategy import AttnStrategy, ExpertStrategy
 from repro.serving import Request
 from repro.serving.scheduler import FifoScheduler

@@ -1,5 +1,4 @@
 """Training substrate: optimizer math, loss goes down, checkpoint IO."""
-import os
 import tempfile
 
 import jax
@@ -11,8 +10,8 @@ from repro.data import synthetic_lm_data
 from repro.training.checkpoint import (latest_step, load_checkpoint,
                                        save_checkpoint)
 from repro.training.optimizer import adamw_init, adamw_update, cosine_lr
-from repro.training.train_loop import (TrainState, init_train_state,
-                                       make_train_step, train_loop)
+from repro.training.train_loop import (init_train_state, make_train_step,
+                                       train_loop)
 
 
 def test_adamw_converges_quadratic():
