@@ -5,6 +5,7 @@ Asserts the paper's two observations:
   - prefill: TP communication > EP communication (all-reduce volume);
   - decode:  EP expert compute > TP expert compute (load imbalance).
 """
+
 from __future__ import annotations
 
 from repro.configs import get_config
@@ -15,8 +16,7 @@ from repro.core.strategy import AttnStrategy, ExpertStrategy
 
 def run(csv_rows):
     cfg = get_config("mixtral-8x7b")
-    planner = HAPPlanner(cfg, "a6000", 4,
-                         model=cached_latency_model("a6000"))
+    planner = HAPPlanner(cfg, "a6000", 4, model=cached_latency_model("a6000"))
     sim = planner.sim
     w = Workload(batch=8, prompt=2048, gen=64)
     attn_tp = AttnStrategy(dp=1, tp=4)
@@ -30,8 +30,10 @@ def run(csv_rows):
             rows[(phase, name)] = c
             csv_rows.append(
                 f"fig2_breakdown_{phase}_{name},0,"
-                f"attn_ms={c.t_attn*1e3:.3f};expert_ms={c.t_expert*1e3:.3f};"
-                f"comm_ms={c.t_comm*1e3:.3f}")
+                f"attn_ms={c.t_attn * 1e3:.3f};"
+                f"expert_ms={c.t_expert * 1e3:.3f};"
+                f"comm_ms={c.t_comm * 1e3:.3f}"
+            )
 
     ok = True
     # prefill: TP comm dominates EP comm on PCIe (paper's key observation)
@@ -41,8 +43,7 @@ def run(csv_rows):
     # experts both layouts stream identical active-weight bytes, so the
     # memory-bound decode step lands at parity (within 5%); the paper's
     # gap comes from compute-visible imbalance on its GPUs.
-    if not rows[("decode", "EP")].t_expert >= \
-            0.95 * rows[("decode", "TP")].t_expert:
+    if not rows[("decode", "EP")].t_expert >= 0.95 * rows[("decode", "TP")].t_expert:
         ok = False
     csv_rows.append(f"fig2_claims,0,pass={ok}")
 
@@ -50,11 +51,11 @@ def run(csv_rows):
     plan = planner.plan(w)
     L = cfg.num_layers
     for name, (a, ep, ed) in (
-            ("TP", (attn_tp, exp_tp, exp_tp)),
-            ("EP", (attn_tp, exp_ep, exp_ep)),
-            ("HAP", (plan.attn, plan.expert_prefill, plan.expert_decode))):
+        ("TP", (attn_tp, exp_tp, exp_tp)),
+        ("EP", (attn_tp, exp_ep, exp_ep)),
+        ("HAP", (plan.attn, plan.expert_prefill, plan.expert_decode)),
+    ):
         t_pre = L * sim.true_layer_time(w, "prefill", a, ep)
         t_dec = w.gen * L * sim.true_layer_time(w, "decode", a, ed)
-        csv_rows.append(f"fig8c_{name},0,prefill_s={t_pre:.3f};"
-                        f"decode_s={t_dec:.3f}")
+        csv_rows.append(f"fig8c_{name},0,prefill_s={t_pre:.3f};decode_s={t_dec:.3f}")
     return ok

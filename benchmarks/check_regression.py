@@ -1,0 +1,124 @@
+"""Perf-regression gate for the CI bench-smoke job.
+
+Compares a fresh ``BENCH_*.json`` artifact against the committed
+``benchmarks/baseline.json`` and fails (exit 1) when any gated metric
+regresses past its tolerance. Baselines are dotted paths into the fresh
+payload::
+
+    {
+      "metrics": {
+        "continuous_vs_static.speedup": {"value": 1.25, "max_regression": 0.15},
+        "continuous_vs_static.solo_exact": {"value": true}
+      }
+    }
+
+- numeric entries are higher-is-better: fresh >= value * (1 - max_regression)
+  (default tolerance 0.15; absolute tok/s entries carry a wider tolerance
+  in the committed baseline because CI machines vary — the speedup RATIO
+  is the machine-independent gate),
+- boolean entries must match exactly (the greedy-equivalence gate).
+
+Usage::
+
+    python benchmarks/check_regression.py BENCH_scenario_speedup.json \
+        [--baseline benchmarks/baseline.json] [--update]
+
+``--update`` rewrites the baseline's values from the fresh run (keeping
+each metric's tolerance) — run it locally when a PR legitimately moves
+the numbers, and commit the result.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_TOLERANCE = 0.15
+
+
+def resolve(payload, dotted_path):
+    cur = payload
+    for part in dotted_path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check(payload: dict, baseline: dict):
+    """Returns (rows, ok): one row per gated metric, overall verdict."""
+    rows = []
+    ok = True
+    for path, spec in baseline.get("metrics", {}).items():
+        want = spec["value"]
+        got = resolve(payload, path)
+        if got is None:
+            rows.append((path, want, "MISSING", "FAIL"))
+            ok = False
+        elif isinstance(want, bool):
+            good = got == want
+            rows.append((path, want, got, "ok" if good else "FAIL"))
+            ok &= good
+        else:
+            tol = float(spec.get("max_regression", DEFAULT_TOLERANCE))
+            floor = want * (1.0 - tol)
+            good = float(got) >= floor
+            verdict = "ok" if good else f"FAIL (< {floor:.3f})"
+            rows.append((path, want, got, verdict))
+            ok &= good
+    return rows, ok
+
+
+def update_baseline(payload: dict, baseline: dict) -> dict:
+    for path, spec in baseline.get("metrics", {}).items():
+        got = resolve(payload, path)
+        if got is not None:
+            spec["value"] = got
+    return baseline
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="fresh BENCH_*.json artifact")
+    ap.add_argument(
+        "--baseline",
+        default=os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baseline.json"),
+        help="committed baseline (default: benchmarks/baseline.json)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline values from the fresh run and exit",
+    )
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        payload = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(update_baseline(payload, baseline), f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"updated {args.baseline} from {args.fresh}")
+        return
+
+    rows, ok = check(payload, baseline)
+    width = max(len(r[0]) for r in rows) if rows else 0
+    for path, want, got, verdict in rows:
+        print(f"  {path:<{width}}  baseline={want!r:<10} fresh={got!r:<10} "
+              f"{verdict}")
+    if not ok:
+        print("bench-gate: REGRESSION past tolerance "
+              "(see benchmarks/check_regression.py --update)")
+        sys.exit(1)
+    print("bench-gate: ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,14 +6,20 @@ For each MoE/dense/ssm arch and serving scenario, report the selected
 hybrid strategy and predicted speedup vs static TP on a 16-device slice
 (one v5e tray) — the planner's TPU-native generalization check.
 """
+
 from __future__ import annotations
 
 from repro.configs import get_config
 from repro.core import HAPPlanner, Workload
 from repro.core.latency import cached_latency_model
 
-ARCHS = ("deepseek-moe-16b", "qwen3-moe-30b-a3b", "mixtral-8x7b",
-         "mistral-nemo-12b", "falcon-mamba-7b")
+ARCHS = (
+    "deepseek-moe-16b",
+    "qwen3-moe-30b-a3b",
+    "mixtral-8x7b",
+    "mistral-nemo-12b",
+    "falcon-mamba-7b",
+)
 SCENARIOS = ((4096, 64), (256, 2048))
 
 
@@ -31,19 +37,15 @@ def run(csv_rows):
                     plan = planner.plan(w)
                 except ValueError:
                     continue
-                r = planner.evaluate(planner.tp_plan(), w) \
-                    / planner.evaluate(plan, w)
+                r = planner.evaluate(planner.tp_plan(), w) / planner.evaluate(plan, w)
                 if r > best[0]:
                     best = (r, plan)
             sp, plan = best
             if plan is None:
-                csv_rows.append(
-                    f"hap_tpu_{arch}_{prompt}_{gen},0,infeasible")
+                csv_rows.append(f"hap_tpu_{arch}_{prompt}_{gen},0,infeasible")
                 continue
             desc = plan.describe().replace(" ", ";")
-            csv_rows.append(
-                f"hap_tpu_{arch}_{prompt}_{gen},0,"
-                f"speedup={sp:.3f};{desc}")
+            csv_rows.append(f"hap_tpu_{arch}_{prompt}_{gen},0,speedup={sp:.3f};{desc}")
             if sp < 0.95:
                 ok = False
     return ok

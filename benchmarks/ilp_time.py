@@ -1,6 +1,7 @@
 """§III-C claim — ILP solve time: "for typical limited-scale deployment
 scenarios (e.g., single-machine 8-GPU configurations), the optimization
 completes consistently within one second"."""
+
 from __future__ import annotations
 
 import time
@@ -15,8 +16,9 @@ from repro.core.latency import cached_latency_model
 
 def run(csv_rows):
     # full planner (cost building + ILP) on an 8-device space
-    planner = HAPPlanner(get_config("qwen2-57b-a14b"), "a100", 8,
-                         model=cached_latency_model("a100"))
+    planner = HAPPlanner(
+        get_config("qwen2-57b-a14b"), "a100", 8, model=cached_latency_model("a100")
+    )
     times = []
     # batch >= 2: with 28 attention heads on 8 devices, batch 1
     # admits no legal (A_d, A_t) split (Eq. 5 divisibility)
@@ -25,15 +27,22 @@ def run(csv_rows):
         plan = planner.plan(w)
         times.append(plan.ilp_time)
     worst = max(times)
-    csv_rows.append(f"ilp_plan_8dev,{np.mean(times)*1e6:.0f},"
-                    f"worst_s={worst:.4f};pass={worst < 1.0}")
+    csv_rows.append(
+        f"ilp_plan_8dev,{np.mean(times) * 1e6:.0f},"
+        f"worst_s={worst:.4f};pass={worst < 1.0}"
+    )
 
     # raw solver scaling on synthetic spaces up to 64-strategy blocks
     rng = np.random.default_rng(0)
     for k in (8, 16, 32, 64):
-        ilp = HapIlp(a=rng.random(k), p=rng.random(k), d=rng.random(k),
-                     P=rng.random((k, k)), D=rng.random((k, k)),
-                     C=rng.random((k, k)))
+        ilp = HapIlp(
+            a=rng.random(k),
+            p=rng.random(k),
+            d=rng.random(k),
+            P=rng.random((k, k)),
+            D=rng.random((k, k)),
+            C=rng.random((k, k)),
+        )
         t0 = time.perf_counter()
         ilp.solve()
         us = (time.perf_counter() - t0) * 1e6

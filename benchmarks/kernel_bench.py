@@ -3,6 +3,7 @@ reference paths (what the models execute off-TPU) + interpret-mode parity
 checks for the Pallas TPU kernels. Wall-times on CPU are NOT TPU
 performance — the TPU-side cost model lives in the roofline analysis.
 """
+
 from __future__ import annotations
 
 import time
@@ -45,16 +46,19 @@ def run(csv_rows):
     err = float(jnp.max(jnp.abs(out_g - ref.grouped_matmul_ref(lhs, rhs))))
     csv_rows.append(f"kernel_gmm_pallas_interp,0,max_err={err:.2e}")
 
-    pk = jax.random.randint(ks[0], (1024, 64), 0, 256,
-                            jnp.int32).astype(jnp.uint8)
+    pk = jax.random.randint(ks[0], (1024, 64), 0, 256, jnp.int32).astype(jnp.uint8)
     sc = jax.random.uniform(ks[1], (1024, 1), jnp.float32, 0.01, 0.2)
     zp = jax.random.uniform(ks[2], (1024, 1), jnp.float32, -1, 1)
-    us = _time(jax.jit(lambda a, b, c: ref.int4_dequant_ref(a, b, c)),
-               pk, sc, zp)
+    us = _time(jax.jit(lambda a, b, c: ref.int4_dequant_ref(a, b, c)), pk, sc, zp)
     csv_rows.append(f"kernel_dequant_ref_jnp,{us:.0f},G1024gs128")
     out_d = int4_dequant(pk, sc, zp)
-    err = float(jnp.max(jnp.abs(
-        out_d.astype(jnp.float32)
-        - ref.int4_dequant_ref(pk, sc, zp).astype(jnp.float32))))
+    err = float(
+        jnp.max(
+            jnp.abs(
+                out_d.astype(jnp.float32)
+                - ref.int4_dequant_ref(pk, sc, zp).astype(jnp.float32)
+            )
+        )
+    )
     csv_rows.append(f"kernel_dequant_pallas_interp,0,max_err={err:.2e}")
     return True

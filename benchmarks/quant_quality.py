@@ -6,6 +6,7 @@ outlier-bearing weight matrices, reporting cosine similarity (paper:
 >99.5%) and relative error, plus end-to-end logit divergence through a
 reduced MoE model served via the INT4 transition path.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -15,8 +16,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.quantization import quant_error_stats, quantize_int4, \
-    dequantize_int4
+from repro.core.quantization import (
+    dequantize_int4,
+    quant_error_stats,
+    quantize_int4,
+)
 
 
 def run(csv_rows):
@@ -35,19 +39,20 @@ def run(csv_rows):
         stats[scheme] = s
         csv_rows.append(
             f"table1_{scheme},{us:.0f},cos={s['cosine']:.6f};"
-            f"rel_mae={s['rel_mae']:.5f};compress={s['compression']:.2f}x")
+            f"rel_mae={s['rel_mae']:.5f};compress={s['compression']:.2f}x"
+        )
 
-    ok = (stats["per_group"]["cosine"] > 0.995
-          and stats["per_group"]["rel_mae"]
-          < stats["per_tensor"]["rel_mae"])
+    ok = (
+        stats["per_group"]["cosine"] > 0.995
+        and stats["per_group"]["rel_mae"] < stats["per_tensor"]["rel_mae"]
+    )
 
     # end-to-end: logit divergence of a reduced MoE model after the INT4
     # expert round-trip (the transition's numerical cost)
     from repro.models import init_params, make_batch
-    from repro.models.transformer import embed_inputs, forward_hidden, \
-        unembed
-    cfg = dataclasses.replace(get_config("deepseek-moe-16b").reduced(),
-                              dtype="float32")
+    from repro.models.transformer import embed_inputs, forward_hidden, unembed
+
+    cfg = dataclasses.replace(get_config("deepseek-moe-16b").reduced(), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
     batch = make_batch(cfg, 32, 2, with_labels=False)
     x = embed_inputs(params, cfg, batch, None)
@@ -63,8 +68,12 @@ def run(csv_rows):
     hq, _, _ = forward_hidden(params_q, cfg, xq, None)
     logits_q = unembed(params_q, cfg, hq[:, -1:, :])
     div = float(np.max(np.abs(np.asarray(logits) - np.asarray(logits_q))))
-    agree = float(np.mean(np.argmax(np.asarray(logits), -1)
-                          == np.argmax(np.asarray(logits_q), -1)))
-    csv_rows.append(f"table1_e2e_logit_divergence,0,max_abs={div:.4f};"
-                    f"greedy_agree={agree:.3f}")
+    agree = float(
+        np.mean(
+            np.argmax(np.asarray(logits), -1) == np.argmax(np.asarray(logits_q), -1)
+        )
+    )
+    csv_rows.append(
+        f"table1_e2e_logit_divergence,0,max_abs={div:.4f};greedy_agree={agree:.3f}"
+    )
     return ok and agree >= 0.5

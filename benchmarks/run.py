@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows and a PASS/FAIL summary of
 the paper-claim checks. Usage: ``PYTHONPATH=src python -m benchmarks.run``
 (optionally ``--only fig5,table1``).
 """
+
 from __future__ import annotations
 
 import argparse
@@ -13,12 +14,19 @@ import time
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="",
-                    help="comma-separated benchmark keys")
+    ap.add_argument("--only", default="", help="comma-separated benchmark keys")
     args = ap.parse_args()
 
-    from . import (breakdown, hap_tpu_pool, ilp_time, kernel_bench,
-                   quant_quality, scenario_speedup, sim_accuracy)
+    from . import (
+        breakdown,
+        hap_tpu_pool,
+        ilp_time,
+        kernel_bench,
+        quant_quality,
+        scenario_speedup,
+        sim_accuracy,
+    )
+
     suites = {
         "fig5_sim_accuracy": sim_accuracy.run,
         "fig2_fig8c_breakdown": breakdown.run,
@@ -41,7 +49,7 @@ def main() -> None:
             rows.append(f"{name}_ERROR,0,{type(e).__name__}:{e}")
             ok = False
         results[name] = ok
-        rows.append(f"{name}_suite,{(time.time()-t0)*1e6:.0f},pass={ok}")
+        rows.append(f"{name}_suite,{(time.time() - t0) * 1e6:.0f},pass={ok}")
     print("\n".join(rows))
     print("\n== paper-claim checks ==")
     for name, ok in results.items():

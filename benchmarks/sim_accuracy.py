@@ -5,6 +5,7 @@ communication models on held-out measured operator latencies. We fit on
 the synthetic measurement surfaces (DESIGN.md §8) and evaluate on held-out
 samples per chip.
 """
+
 from __future__ import annotations
 
 from repro.core.latency import cached_latency_model
@@ -18,11 +19,13 @@ def run(csv_rows):
         m = cached_latency_model(chip)
         csv_rows.append(
             f"fig5_sim_accuracy_{chip},0,"
-            f"compute_err={m.compute_err:.4f};comm_err={m.comm_err:.4f}")
+            f"compute_err={m.compute_err:.4f};comm_err={m.comm_err:.4f}"
+        )
         worst_c = max(worst_c, m.compute_err)
         worst_m = max(worst_m, m.comm_err)
     ok = worst_c < 0.10 and worst_m < 0.05
     csv_rows.append(
         f"fig5_claim_check,0,compute<10%={worst_c < 0.10};"
-        f"comm<5%={worst_m < 0.05};pass={ok}")
+        f"comm<5%={worst_m < 0.05};pass={ok}"
+    )
     return ok

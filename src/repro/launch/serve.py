@@ -56,6 +56,11 @@ def main() -> None:
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching (decode-time joins) instead "
                          "of lockstep static batches")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="continuous: chunked-prefill size in tokens "
+                         "(0 = one chunk per prompt bucket)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="continuous: paged KV block size in tokens")
     args = ap.parse_args()
     logging.basicConfig(
         level=logging.INFO, format="%(name)s: %(message)s")
@@ -91,7 +96,9 @@ def main() -> None:
     # execution on local devices uses the reduced config (dev box)
     cfg = dataclasses.replace(full_cfg.reduced(), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = session.engine(params, cfg=cfg, max_batch=args.batch)
+    engine = session.engine(params, cfg=cfg, max_batch=args.batch,
+                            kv_block_size=args.kv_block_size,
+                            prefill_chunk=args.prefill_chunk or None)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         long_req = (not args.uniform) and i >= args.requests // 2
@@ -105,8 +112,9 @@ def main() -> None:
     st = engine.stats
     if args.continuous:
         print(f"served {len(done)} requests, {total_tok} tokens: "
-              f"{st.joins} joins over {st.decode_steps} decode steps "
-              f"({st.batches} live-batch generations)")
+              f"{st.joins} joins over {st.decode_steps} decode steps, "
+              f"{st.prefill_chunks} prefill chunks ({st.fused_steps} "
+              f"fused; {st.batches} live-batch generations)")
     else:
         print(f"served {len(done)} requests, {total_tok} tokens in "
               f"{st.batches} batches")

@@ -18,6 +18,9 @@ from repro.configs.base import ModelConfig
 from .common import apply_rope, softcap
 
 NEG_INF = -2.0e38  # f32-safe mask value
+# reserved paged-cache block id — mirrors repro.serving.kv_cache.TRASH_BLOCK
+# (kept literal here so the model layer stays import-free of serving)
+TRASH_BLOCK = 0
 
 
 class AttnTemps(NamedTuple):
@@ -223,48 +226,98 @@ def prefill_kv(x: jax.Array, w: AttnTemps, cfg: ModelConfig):
 
 def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
                      is_global, k_cache: jax.Array, v_cache: jax.Array,
-                     pos: jax.Array, plan) -> tuple:
-    """One-token decode. x: (B, 1, d); caches (B, Smax, Hkv, hd).
+                     pos: jax.Array, plan,
+                     block_tables: Optional[jax.Array] = None) -> tuple:
+    """Cache-appending attention: one decode token or one prefill chunk.
+
+    x: (B, C, d) — C == 1 is plain decode; C > 1 is a chunked-prefill
+    append (paged caches only): the chunk's K/V are written at positions
+    ``pos[i] .. pos[i]+C-1`` and each query attends causally over the
+    cache prefix plus the chunk's own earlier tokens.
 
     ``pos`` is a scalar (lockstep batch: every row decodes at the same
     depth) or a (B,) vector (continuous batching: each row sits at its
     own depth — RoPE angles, cache writes and validity masks are all
     per-row; see DESIGN.md §4b).
 
-    Returns (out (B,1,d), new_k_cache, new_v_cache). The new token's K/V are
-    written at ``pos``; attention runs over the full cache with a validity
-    mask (k_pos <= pos), which under a sequence-sharded cache lowers to
-    partial softmax + all-reduce (flash-decoding analog).
-    """
-    B = x.shape[0]
-    q, k_new, v_new = qkv_project(x, w, cfg, pos[None, None]
-                                  if pos.ndim == 0 else pos[:, None])
-    if pos.ndim:
-        # per-row scatter: row i writes its token's K/V at pos[i]. Rows
-        # whose pos is out of range (drained slots) write nowhere.
-        write = (jnp.arange(k_cache.shape[1], dtype=jnp.int32)[None, :]
-                 == pos[:, None])                      # (B, Smax)
-        k_cache = jnp.where(write[:, :, None, None],
-                            k_new.astype(k_cache.dtype), k_cache)
-        v_cache = jnp.where(write[:, :, None, None],
-                            v_new.astype(v_cache.dtype), v_cache)
-    else:
-        k_cache = jax.lax.dynamic_update_slice(
-            k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
-    if plan is not None and not plan.is_null:
-        k_cache = plan.constrain(k_cache, plan.cache_spec_bshd())
-        v_cache = plan.constrain(v_cache, plan.cache_spec_bshd())
+    Caches are contiguous ``(B, Smax, Hkv, hd)`` when ``block_tables`` is
+    None, else paged ``(num_blocks, block_size, Hkv, hd)`` pages shared
+    by all rows, with ``block_tables`` (B, max_blocks) mapping each row's
+    logical positions to physical blocks. The paged path scatters the new
+    K/V through the table and gathers each row's logical view back for
+    attention; rows whose table entries point at the trash block (id 0 —
+    drained slots, unallocated tail entries) scatter dead writes there
+    and have every stale gathered position killed by the causal mask
+    (stale offsets always sit *above* the row's query position, exact
+    zeros after the online softmax).
 
-    Smax = k_cache.shape[1]
+    Returns (out (B,C,d), new_k_cache, new_v_cache). Attention runs over
+    the full cache with a validity mask, which under a sequence-sharded
+    cache lowers to partial softmax + all-reduce (flash-decoding analog).
+    """
+    B, C = x.shape[0], x.shape[1]
+    q_pos = ((pos[:, None] if pos.ndim else pos[None, None])
+             + jnp.arange(C, dtype=jnp.int32))          # (B|1, C)
+    q, k_new, v_new = qkv_project(x, w, cfg, q_pos)
+
+    if block_tables is not None:
+        bs = k_cache.shape[1]
+        max_blocks = block_tables.shape[1]
+        tpos = jnp.broadcast_to(q_pos, (B, C))          # write positions
+        blk = tpos // bs
+        off = tpos % bs
+        phys = jnp.take_along_axis(
+            block_tables, jnp.clip(blk, 0, max_blocks - 1), axis=1)
+        # positions past the table width go to the trash block, never to
+        # the last real block (that would corrupt a live token's slot)
+        phys = jnp.where(blk < max_blocks, phys, TRASH_BLOCK)      # (B, C)
+        k_cache = k_cache.at[phys, off].set(k_new.astype(k_cache.dtype))
+        v_cache = v_cache.at[phys, off].set(v_new.astype(v_cache.dtype))
+        if plan is not None and not plan.is_null \
+                and plan.kv_shard == "heads":
+            k_cache = plan.constrain(k_cache, plan.cache_spec_bshd())
+            v_cache = plan.constrain(v_cache, plan.cache_spec_bshd())
+        # gather each row's logical view: (B, max_blocks*bs, Hkv, hd)
+        k = k_cache[block_tables].reshape(
+            (B, max_blocks * bs) + k_cache.shape[2:])
+        v = v_cache[block_tables].reshape(
+            (B, max_blocks * bs) + v_cache.shape[2:])
+        k, v, _ = _maybe_repeat_kv(k, v, cfg, plan)
+        Smax = max_blocks * bs
+        # validity comes from causality alone: a row's stale/unwritten
+        # positions are always > its query position (see docstring)
+        kv_len = None
+    else:
+        if C > 1:
+            assert pos.ndim == 0, \
+                "multi-token append on a contiguous cache is lockstep-only"
+        if pos.ndim:
+            # per-row scatter: row i writes its token's K/V at pos[i].
+            # Rows whose pos is out of range (drained slots) write nowhere.
+            write = (jnp.arange(k_cache.shape[1], dtype=jnp.int32)[None, :]
+                     == pos[:, None])                  # (B, Smax)
+            k_cache = jnp.where(write[:, :, None, None],
+                                k_new.astype(k_cache.dtype), k_cache)
+            v_cache = jnp.where(write[:, :, None, None],
+                                v_new.astype(v_cache.dtype), v_cache)
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+        if plan is not None and not plan.is_null:
+            k_cache = plan.constrain(k_cache, plan.cache_spec_bshd())
+            v_cache = plan.constrain(v_cache, plan.cache_spec_bshd())
+        k, v = k_cache, v_cache
+        Smax = k_cache.shape[1]
+        kv_len = pos + C
+
     k_positions = jnp.arange(Smax, dtype=jnp.int32)
-    q_positions = (pos[:, None] if pos.ndim
-                   else jnp.full((1,), 0, jnp.int32) + pos)
-    out = full_attention(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+    q_positions = q_pos if pos.ndim else q_pos[0]
+    out = full_attention(q, k.astype(q.dtype), v.astype(q.dtype),
                          cfg, is_global, q_positions, k_positions,
-                         kv_len=pos + 1, kv_chunk=max(Smax, 1))
-    o = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, -1).astype(x.dtype),
+                         kv_len=kv_len, kv_chunk=max(Smax, 1))
+    o = jnp.einsum("bse,ed->bsd", out.reshape(B, C, -1).astype(x.dtype),
                    w.wo, preferred_element_type=x.dtype)
     return o, k_cache, v_cache
 

@@ -48,13 +48,17 @@ def _scan(*args, **kw):
 
 class DecodeCache(NamedTuple):
     """Decode-time state. Unused fields are None for a given family."""
-    k: Optional[jax.Array]     # (L, B, Smax, Hkv, hd)
+    k: Optional[jax.Array]     # (L, B, Smax, Hkv, hd) contiguous, or
+    #                            (L, num_blocks, block_size, Hkv, hd) paged
     v: Optional[jax.Array]
     conv: Optional[jax.Array]  # (L, B, cw-1, d_inner)
     ssm: Optional[jax.Array]   # (L, B, d_inner, N) float32
     pos: jax.Array             # int32 tokens written so far: scalar for a
     #                            lockstep batch, (B,) per-row under
     #                            continuous batching (DESIGN.md §4b)
+    block_tables: Optional[jax.Array] = None  # (B, max_blocks) int32 for a
+    #                            paged cache (None => contiguous layout);
+    #                            unused entries point at trash block 0
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +251,33 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                        pos=jnp.zeros((), jnp.int32))
 
 
+def init_paged_cache(cfg: ModelConfig, nslots: int, num_blocks: int,
+                     block_size: int, max_blocks: int,
+                     dtype=jnp.bfloat16, plan=None) -> DecodeCache:
+    """A block-pooled decode cache (DESIGN.md §4b): K/V pages shared by
+    all ``nslots`` live rows, addressed through per-row block tables.
+
+    ``num_blocks`` includes the reserved trash block 0 (see
+    ``repro.serving.kv_cache``). Mamba state is not paged — attention-only
+    models for now; the serving engine falls back to contiguous slots for
+    mamba/hybrid families.
+    """
+    assert cfg.has_attention and not cfg.has_mamba, \
+        "paged caches cover attention KV only (mamba state is unpaged)"
+    L = cfg.num_layers
+    kv_dt = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype else dtype
+    shape = (L, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    k = jnp.zeros(shape, kv_dt)
+    v = jnp.zeros(shape, kv_dt)
+    if plan is not None and not plan.is_null and plan.kv_shard == "heads":
+        k = plan.constrain(k, plan.kv_cache_spec())
+        v = plan.constrain(v, plan.kv_cache_spec())
+    return DecodeCache(
+        k=k, v=v, conv=None, ssm=None,
+        pos=jnp.zeros((nslots,), jnp.int32),
+        block_tables=jnp.zeros((nslots, max_blocks), jnp.int32))
+
+
 def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
             max_len: int, plan=None) -> Tuple[jax.Array, DecodeCache]:
     """Process the prompt; return (last-position logits, primed cache).
@@ -377,12 +408,36 @@ def merge_cache_rows(cache: DecodeCache, sub: DecodeCache,
 
     The decode-time join (DESIGN.md §4b): a freshly prefilled request's
     cache rows — KV and mamba conv/ssm state — replace the freed slots of
-    the live decode cache. ``sub`` must have been allocated at the same
-    ``max_len`` as ``cache``. When ``cache.pos`` is a per-row vector the
-    joined rows' positions are set from ``sub.pos``; a scalar ``pos``
-    (lockstep batch) is left to the caller.
+    the live decode cache.
+
+    Contiguous ``cache``: ``sub`` must have been allocated at the same
+    ``max_len``. Paged ``cache`` (``block_tables`` set): ``sub`` is a
+    contiguous B=len(rows) cache whose tokens are scattered through each
+    destination row's block table — the caller must have allocated enough
+    blocks to cover ``sub``'s sequence length, else the overflow lands in
+    the trash block. When ``cache.pos`` is a per-row vector the joined
+    rows' positions are set from ``sub.pos``; a scalar ``pos`` (lockstep
+    batch) is left to the caller.
     """
     idx = jnp.asarray(rows, jnp.int32)
+
+    if cache.block_tables is not None:
+        bs = cache.k.shape[2]
+        max_blocks = cache.block_tables.shape[1]
+        S = sub.k.shape[2]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        blk = positions // bs
+        off = positions % bs                            # (S,)
+        phys = cache.block_tables[idx][:, jnp.clip(blk, 0, max_blocks - 1)]
+        # out-of-width overflow lands in the trash block (see attention)
+        phys = jnp.where((blk < max_blocks)[None, :], phys,
+                         attn_mod.TRASH_BLOCK)          # (n, S)
+        new = cache._replace(
+            k=cache.k.at[:, phys, off].set(sub.k.astype(cache.k.dtype)),
+            v=cache.v.at[:, phys, off].set(sub.v.astype(cache.v.dtype)),
+            pos=cache.pos.at[idx].set(
+                jnp.broadcast_to(sub.pos, idx.shape).astype(jnp.int32)))
+        return new
 
     def put(dst, src):
         if dst is None:
@@ -402,14 +457,22 @@ def merge_cache_rows(cache: DecodeCache, sub: DecodeCache,
 def decode_step(params, cfg: ModelConfig, token: jax.Array,
                 cache: DecodeCache, plan=None
                 ) -> Tuple[jax.Array, DecodeCache]:
-    """One decode step. token: (B, 1) int32 -> (logits (B, V), new cache).
+    """One cache-appending step: a decode token or a prefill chunk.
+
+    token: (B, C) int32 -> (last-position logits (B, V), new cache).
+    C == 1 is plain decode; C > 1 appends a chunk at each row's position
+    (chunked prefill, paged caches only — mamba state has no chunked
+    append yet, so multi-token steps assert attention-only).
 
     ``cache.pos`` may be a scalar (lockstep) or a (B,) vector (continuous
-    batching); either way the returned cache has ``pos + 1`` — callers
+    batching); either way the returned cache has ``pos + C`` — callers
     that freeze drained rows (the continuous engine) re-pin ``pos``
     before the next step.
     """
     assert cfg.causal
+    C = token.shape[1]
+    assert C == 1 or not cfg.has_mamba, \
+        "chunked append is attention-only (no mamba state chunk step)"
     x = embed_tokens(params, cfg, token)
     if plan is not None and not plan.is_null:
         x = plan.constrain(x, plan.act_btd())
@@ -424,19 +487,23 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
         xs["conv"] = cache.conv
         xs["ssm"] = cache.ssm
 
-    body = make_decode_body(cfg, plan, pos)
+    body = make_decode_body(cfg, plan, pos, cache.block_tables)
     h, ys = _scan(body, x, xs)
-    new_cache = cache._replace(pos=pos + 1)
+    new_cache = cache._replace(pos=pos + C)
     if cfg.has_attention:
         new_cache = new_cache._replace(k=ys["k"], v=ys["v"])
     if cfg.has_mamba:
         new_cache = new_cache._replace(conv=ys["conv"], ssm=ys["ssm"])
-    logits = unembed(params, cfg, h)
+    logits = unembed(params, cfg, h[:, -1:, :])
     return logits[:, 0], new_cache
 
 
-def make_decode_body(cfg: ModelConfig, plan, pos):
-    """The decode layer-scan body (exposed for the dry-run cost probe)."""
+def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None):
+    """The decode layer-scan body (exposed for the dry-run cost probe).
+
+    ``block_tables`` (shared by every layer — one logical layout per
+    request) switches the attention path to the paged gather/scatter.
+    """
 
     def body(h, per_layer):
         lp, flag = per_layer["lp"], per_layer["flag"]
@@ -446,7 +513,8 @@ def make_decode_body(cfg: ModelConfig, plan, pos):
         if cfg.has_attention:
             w = attn_mod.AttnTemps(**lp["attn"])
             a_out, k_c, v_c = attn_mod.decode_attention(
-                hn, w, cfg, flag, per_layer["k"], per_layer["v"], pos, plan)
+                hn, w, cfg, flag, per_layer["k"], per_layer["v"], pos, plan,
+                block_tables=block_tables)
             ys["k"], ys["v"] = k_c, v_c
             outs.append(("attn", a_out))
         if cfg.has_mamba:

@@ -1,4 +1,15 @@
-from .engine import (Completion, EngineStats,  # noqa: F401
-                     InferenceEngine, Request, engine_from_hap)
-from .scheduler import ContinuousScheduler, FifoScheduler  # noqa: F401
+from .engine import (  # noqa: F401
+    Completion,
+    EngineStats,
+    InferenceEngine,
+    Request,
+    engine_from_hap,
+)
+from .kv_cache import (  # noqa: F401
+    BlockAllocator,
+    BlockTable,
+    OutOfBlocks,
+    blocks_for,
+)
 from .sampling import SamplingParams  # noqa: F401
+from .scheduler import ContinuousScheduler, FifoScheduler  # noqa: F401

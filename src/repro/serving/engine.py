@@ -28,15 +28,23 @@ Two serving loops share the engine (DESIGN.md §4/§4b):
   ``run()``              — static batching: a batch admitted together
                            decodes in lockstep until every request stops.
   ``serve_continuous()`` — continuous batching: an in-flight decode set
-                           with per-request state (position, KV length,
-                           stop status); queued requests join at
-                           decode-step boundaries (``admit``), decode one
-                           step per iteration (``step_decode``) and free
-                           their slot on completion (``retire``).
-                           Re-planning hooks at admission time on the
-                           *live* workload bucket, so Eq.-6 transitions
-                           fire mid-stream.
+                           with per-request state; queued requests join
+                           at decode-step boundaries (``admit``), advance
+                           one fused step per iteration (``step``: a
+                           prefill chunk and/or a decode token) and free
+                           their resources on completion (``retire``).
+
+Continuous KV memory is **paged** for attention-only models (the
+default): a shared block pool (``repro.serving.kv_cache``) replaces the
+old per-slot worst-case contiguous reservation, admission checks free
+blocks, blocks are allocated on demand as decode advances and freed at
+retirement. Prompt prefill is **chunked** — a join feeds its padded
+prompt in ``prefill_chunk``-token pieces, each fused with a live decode
+step, so admission never stalls decode for more than one chunk.
+Mamba/hybrid families (no chunked state append yet) fall back to the
+contiguous fixed-slot path.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -53,7 +61,14 @@ from repro.core.flops import Workload
 from repro.core.hap import HAPPlan, HAPPlanner
 from repro.core.session import round_up
 from repro.core.transition import TransitionExecutor
-from repro.models import decode_step, init_cache, merge_cache_rows, prefill
+from repro.models import (
+    decode_step,
+    init_cache,
+    init_paged_cache,
+    merge_cache_rows,
+    prefill,
+)
+from .kv_cache import TRASH_BLOCK, BlockAllocator, BlockTable, blocks_for
 from .sampling import SamplingParams, sample
 from .scheduler import ContinuousScheduler, QueuedRequest
 
@@ -66,8 +81,7 @@ _EXPERT_LEAVES = ("wi_gate", "wi_up", "wo")
 class Request:
     prompt: Sequence[int]
     max_new_tokens: int = 32
-    sampling: SamplingParams = dataclasses.field(
-        default_factory=SamplingParams)
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
 
 
 @dataclasses.dataclass
@@ -82,69 +96,115 @@ class Completion:
 @dataclasses.dataclass
 class EngineStats:
     """Engine-level accounting (survives empty runs, unlike completions)."""
-    batches: int = 0          # static batches / continuous live-batch
-    #                           generations (cache allocations)
-    replans: int = 0          # batches whose active plan changed (the
-    #                           source ran only on the cache misses)
-    plan_switches: int = 0    # plan changes whose strategies differed
+
+    batches: int = 0  # static batches / continuous live-batch
+    #                   generations (cache allocations)
+    replans: int = 0  # batches whose active plan changed (the
+    #                   source ran only on the cache misses)
+    plan_switches: int = 0  # plan changes whose strategies differed
     cache_hits: int = 0
     transition_ms_total: float = 0.0
     last_transition_ms: float = 0.0
-    joins: int = 0            # continuous: requests admitted mid-stream
-    decode_steps: int = 0     # continuous: decode steps executed
+    joins: int = 0  # continuous: requests admitted mid-stream
+    decode_steps: int = 0  # continuous: decode steps executed
+    prefill_chunks: int = 0  # continuous: prefill chunks processed
+    fused_steps: int = 0  # continuous: chunk+decode fused iterations
 
 
 @dataclasses.dataclass
 class _Slot:
     """Per-request in-flight decode state (one live batch row)."""
+
     req: QueuedRequest
-    start: int                # padded prompt length = first decode position
+    start: int  # padded prompt length = first decode position
     tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False        # decode-sampled EOS seen
+    done: bool = False  # decode-sampled EOS seen
     prefill_ms: float = 0.0
     transition_ms: float = 0.0
     decode_ms: float = 0.0
+    # paged-path state (None/empty on the contiguous fallback):
+    table: Optional[BlockTable] = None  # this row's KV block table
+    pending: List[np.ndarray] = dataclasses.field(default_factory=list)
+    filled: int = 0  # prompt tokens appended so far
+
+    @property
+    def prefilling(self) -> bool:
+        return bool(self.pending)
 
 
 @dataclasses.dataclass
 class _LiveBatch:
-    """The in-flight decode set: a fixed-slot cache plus per-slot state.
+    """The in-flight decode set: per-slot state plus the shared cache.
 
     ``pos`` is the host-side source of truth for per-row decode depth;
     it is re-pinned into the cache before every step so drained slots
-    stay frozen while live rows advance.
+    stay frozen while live rows advance. Under paging, ``tables`` is the
+    host-side mirror of every row's block table (trash-block 0 padded)
+    and is re-pinned the same way.
     """
-    kv_capacity: int
+
+    kv_capacity: int  # logical per-row KV length (tokens)
     slots: List[Optional[_Slot]]
-    cache: Any = None                  # DecodeCache, allocated on 1st admit
-    pos: Optional[np.ndarray] = None   # (nslots,) int32
+    cache: Any = None  # DecodeCache; paged path allocates eagerly
+    pos: Optional[np.ndarray] = None  # (nslots,) int32
     next_tok: Optional[np.ndarray] = None  # (nslots,) int32
+    allocator: Optional[BlockAllocator] = None  # paged path only
+    max_blocks: int = 0  # block-table width
+    tables: Optional[np.ndarray] = None  # (nslots, max_blocks) int32
 
     def active(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots)
-                if s is not None and not s.done]
+        """Rows decoding this step: admitted, prefill complete, not done."""
+        return [
+            i
+            for i, s in enumerate(self.slots)
+            if s is not None and not s.done and not s.prefilling
+        ]
+
+    def prefilling(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None and s.prefilling]
 
 
 class InferenceEngine:
-    def __init__(self, cfg: ModelConfig, params, *, plan=None,
-                 session=None,
-                 hap: Optional[HAPPlanner] = None,
-                 hap_plan: Optional[HAPPlan] = None,
-                 max_batch: int = 8,
-                 use_int4_transition: Optional[bool] = None,
-                 eos_id: int = -1):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        plan=None,
+        session=None,
+        hap: Optional[HAPPlanner] = None,
+        hap_plan: Optional[HAPPlan] = None,
+        max_batch: int = 8,
+        use_int4_transition: Optional[bool] = None,
+        eos_id: int = -1,
+        paged: Optional[bool] = None,
+        kv_block_size: int = 16,
+        kv_blocks: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
+    ):
         self.cfg = cfg
         self.params = params
-        self.plan = plan           # static ShardingPlan (mesh layout) or None
-        self.session = session     # HAPSession (adaptive mode) or None
+        self.plan = plan  # static ShardingPlan (mesh layout) or None
+        self.session = session  # HAPSession (adaptive mode) or None
         self.hap = hap
-        self.hap_plan = hap_plan   # active HAPPlan (pinned, or per-batch)
+        self.hap_plan = hap_plan  # active HAPPlan (pinned, or per-batch)
         self.eos_id = eos_id
         bucket = session.prompt_bucket if session is not None else 64
         self.scheduler = ContinuousScheduler(
-            max_batch=max_batch, bucket=bucket,
-            coalesce_buckets=session is not None)
+            max_batch=max_batch, bucket=bucket, coalesce_buckets=session is not None
+        )
         self.use_int4_transition = use_int4_transition
+        # paged KV + chunked prefill for serve_continuous (attention-only
+        # families; mamba state has no paged layout or chunked append yet)
+        can_page = cfg.has_attention and not cfg.has_mamba
+        self.paged = can_page if paged is None else paged
+        if self.paged and not can_page:
+            raise ValueError("paged KV serving requires an attention-only model")
+        if kv_block_size < 1:
+            raise ValueError("kv_block_size must be positive")
+        self.kv_block_size = kv_block_size
+        self.kv_blocks = kv_blocks  # pool size override (blocks, sans trash)
+        self.prefill_chunk = prefill_chunk  # None => one chunk per bucket
         self.stats = EngineStats()
         # False until a batch has executed under hap_plan: a pre-seeded
         # plan (engine_from_hap) must count as the *initial* plan, not as
@@ -157,33 +217,64 @@ class InferenceEngine:
         self._live: Optional[_LiveBatch] = None
 
     # -- jit function cache ----------------------------------------------
-    def _fns(self, plan, slots: Optional[int] = None):
-        """(prefill_fn, decode_fn) jitted for one ShardingPlan.
-
-        ``slots`` keys the continuous-batching decode entry separately
-        per live-batch slot count: the continuous loop always decodes the
-        *full* slot set (frees included) so the decode shape is constant
-        across joins/retires, and returning to a previously-seen
-        (plan, slot count) pair never recompiles — the recompile-storm
-        guard for decode-time joins.
-        """
-        key = (plan, slots)
+    def _jit(self, key, build):
+        """One jitted wrapper per (kind, plan) — jax.jit's own cache then
+        retraces per argument shape, so a previously-seen shape class
+        (slot count, chunk length, KV pool size) never recompiles and
+        joins/retirements within a live batch keep shapes constant."""
         if key not in self._fn_cache:
-            cfg = self.cfg
-            self._fn_cache[key] = (
-                jax.jit(lambda p, b, ml: prefill(p, cfg, b, max_len=ml,
-                                                 plan=plan),
-                        static_argnums=(2,)),
-                jax.jit(lambda p, t, c: decode_step(p, cfg, t, c,
-                                                    plan=plan)))
+            self._fn_cache[key] = build()
         return self._fn_cache[key]
+
+    def _prefill_fn(self, plan):
+        cfg = self.cfg
+        return self._jit(
+            ("prefill", plan),
+            lambda: jax.jit(
+                lambda p, b, ml: prefill(p, cfg, b, max_len=ml, plan=plan),
+                static_argnums=(2,),
+            ),
+        )
+
+    def _decode_fn(self, plan):
+        cfg = self.cfg
+        return self._jit(
+            ("decode", plan),
+            lambda: jax.jit(lambda p, t, c: decode_step(p, cfg, t, c, plan=plan)),
+        )
+
+    def _chunk_fn(self, plan):
+        """Append one B=1 prefill chunk through a row's block table."""
+        cfg = self.cfg
+        return self._jit(
+            ("chunk", plan),
+            lambda: jax.jit(
+                lambda p, t, row, c: _chunk_append(p, cfg, t, row, c, plan)
+            ),
+        )
+
+    def _fused_fn(self, plan):
+        """One fused continuous step: a prefill chunk for the joining row
+        followed by a decode step over the full slot set, in a single jit
+        call (one entry per plan; shapes retrace internally)."""
+        cfg = self.cfg
+
+        def fused(p, chunk_tok, row, dec_tok, cache):
+            _, cache = _chunk_append(p, cfg, chunk_tok, row, cache, plan)
+            return decode_step(p, cfg, dec_tok, cache, plan=plan)
+
+        return self._jit(("fused", plan), lambda: jax.jit(fused))
 
     def _sharding_for(self, phase: str):
         """Execution layout for a phase under the active plan."""
-        if (self.session is not None and self.session.mesh is not None
-                and self.hap_plan is not None):
+        if (
+            self.session is not None
+            and self.session.mesh is not None
+            and self.hap_plan is not None
+        ):
             return self.hap_plan.to_sharding_plan(
-                self.session.mesh, self.cfg, phase=phase)
+                self.session.mesh, self.cfg, phase=phase
+            )
         return self.plan
 
     # -- transition machinery --------------------------------------------
@@ -210,20 +301,22 @@ class InferenceEngine:
             return 0.0
         t0 = time.perf_counter()
         shardings: Dict[str, Any] = {}
-        if sharding_plan is not None and not getattr(
-                sharding_plan, "is_null", True):
+        if sharding_plan is not None and not getattr(sharding_plan, "is_null", True):
             from repro.models.params import param_pspecs
+
             pspecs = param_pspecs(self.cfg, sharding_plan)["layers"]["moe"]
-            shardings = {n: sharding_plan.sharding(pspecs[n])
-                         for n in _EXPERT_LEAVES}
+            shardings = {
+                n: sharding_plan.sharding(pspecs[n]) for n in _EXPERT_LEAVES
+            }
         moe = dict(self.params["layers"]["moe"])
         for name in _EXPERT_LEAVES:
             key = f"moe/{name}"
             if mechanism == "int4_upload":
                 if key not in self._tx._backups:
                     self._tx.backup(key, moe[name])
-                moe[name] = self._tx.restore(key, sharding=shardings.get(name),
-                                             dtype=moe[name].dtype)
+                moe[name] = self._tx.restore(
+                    key, sharding=shardings.get(name), dtype=moe[name].dtype
+                )
             elif shardings.get(name) is not None:
                 moe[name] = self._tx.reshard(moe[name], shardings[name])
             # else: direct reshard on a null plan — the identity.
@@ -239,17 +332,18 @@ class InferenceEngine:
         Eq.-6 choice; True/False force the mechanism (False preserves the
         legacy exact-weights opt-out — no lossy INT4 round trip)."""
         if self.use_int4_transition is None:
-            return ("int4_upload"
-                    if self.hap_plan.mechanism == "int4_upload"
-                    else "reshard")
+            return (
+                "int4_upload" if self.hap_plan.mechanism == "int4_upload" else "reshard"
+            )
         return "int4_upload" if self.use_int4_transition else "reshard"
 
     def transition_expert_layout(self) -> float:
         """Execute the prefill->decode expert-layout switch; returns ms."""
         if self.hap_plan is None or not self.hap_plan.switches:
             return 0.0
-        return self._relayout_experts(self._plan_mechanism(),
-                                      self._sharding_for("decode"))
+        return self._relayout_experts(
+            self._plan_mechanism(), self._sharding_for("decode")
+        )
 
     def _restore_prefill_layout(self) -> float:
         """Undo the previous batch's prefill->decode switch so a reused
@@ -257,13 +351,22 @@ class InferenceEngine:
         reverse Eq.-6 move at the batch boundary); returns ms."""
         if self.hap_plan is None or not self.hap_plan.switches:
             return 0.0
-        return self._relayout_experts(self._plan_mechanism(),
-                                      self._sharding_for("prefill"))
+        return self._relayout_experts(
+            self._plan_mechanism(), self._sharding_for("prefill")
+        )
 
     # -- adaptive re-planning --------------------------------------------
-    def _activate_plan(self, batch_workload: Workload) -> float:
+    def _activate_plan(self, batch_workload: Workload, phase: str = "prefill") -> float:
         """Fetch/reuse the bucketed plan for this batch; run the Eq.-6
-        inter-batch transition when the active plan changes. Returns ms."""
+        inter-batch transition when the active plan changes. Returns ms.
+
+        ``phase`` is the layout the caller is about to serve under:
+        static batches enter through their *prefill* layout (a reused
+        switching plan gets its prefill layout restored); the paged
+        continuous path enters straight into the *decode* layout (fused
+        chunk+decode steps run there — DESIGN.md §4b), so a reused plan
+        whose experts already sit in the decode layout moves nothing.
+        """
         hits0 = self.session.hits
         new = self.session.plan_for(batch_workload)
         self.stats.cache_hits += self.session.hits - hits0
@@ -272,39 +375,55 @@ class InferenceEngine:
         if old is None or not self._plan_ran:
             self.hap_plan = new
             log.info("initial plan [%s]: %s", bucket, new.describe())
-            return 0.0
+            # decode-phase entry: put a switching plan's experts in the
+            # decode layout once, up front
+            return self.transition_expert_layout() if phase == "decode" else 0.0
         if new is old:
-            # same cached plan — but a switching plan left the experts in
-            # the decode layout after the previous batch; move them back.
-            return self._restore_prefill_layout()
+            # same cached plan — a switching plan left the experts in the
+            # decode layout after the previous batch: restore the prefill
+            # layout for a prefill-phase entry, keep it for decode-phase.
+            return self._restore_prefill_layout() if phase == "prefill" else 0.0
         self.hap_plan = new
         self.stats.replans += 1
-        if (new.attn, new.expert_prefill, new.expert_decode) == \
-                (old.attn, old.expert_prefill, old.expert_decode):
-            log.info("re-planned [%s]: strategies unchanged (%s)",
-                     bucket, new.describe())
-            return self._restore_prefill_layout()
-        mech, predicted = self.session.transition_between(
-            old, new, batch_workload)
+        if (new.attn, new.expert_prefill, new.expert_decode) == (
+            old.attn,
+            old.expert_prefill,
+            old.expert_decode,
+        ):
+            log.info(
+                "re-planned [%s]: strategies unchanged (%s)", bucket, new.describe()
+            )
+            return self._restore_prefill_layout() if phase == "prefill" else 0.0
+        mech, predicted = self.session.transition_between(old, new, batch_workload)
         ms = 0.0
         if mech != "none":
             ms = self._relayout_experts(
-                mech, new.to_sharding_plan(
-                    self.session.mesh, self.cfg, phase="prefill")
-                if self.session.mesh is not None else self.plan)
+                mech,
+                new.to_sharding_plan(self.session.mesh, self.cfg, phase=phase)
+                if self.session.mesh is not None
+                else self.plan,
+            )
+        elif phase == "decode" and new.switches:
+            # Eq.-6 judged old-decode -> new-prefill free, but a decode-
+            # phase entry must land in new's *decode* layout
+            ms = self.transition_expert_layout()
         self.stats.plan_switches += 1
-        log.info("plan switch [%s]: %s -> %s via %s "
-                 "(%.1f ms, predicted %.1f ms)",
-                 bucket, old.describe(), new.describe(), mech, ms,
-                 predicted * 1e3)
+        log.info(
+            "plan switch [%s]: %s -> %s via %s (%.1f ms, predicted %.1f ms)",
+            bucket,
+            old.describe(),
+            new.describe(),
+            mech,
+            ms,
+            predicted * 1e3,
+        )
         return ms
 
     # -- serving -----------------------------------------------------------
     def submit(self, req: Request) -> int:
         return self.scheduler.submit(req.prompt, req.max_new_tokens)
 
-    def run(self, sampling: Optional[SamplingParams] = None
-            ) -> List[Completion]:
+    def run(self, sampling: Optional[SamplingParams] = None) -> List[Completion]:
         """Drain the queue; returns completions in uid order."""
         sampling = sampling if sampling is not None else SamplingParams()
         out: List[Completion] = []
@@ -315,8 +434,9 @@ class InferenceEngine:
             out.extend(self._run_batch(batch, sampling))
         return sorted(out, key=lambda c: c.uid)
 
-    def _run_batch(self, batch: List[QueuedRequest],
-                   sampling: SamplingParams) -> List[Completion]:
+    def _run_batch(
+        self, batch: List[QueuedRequest], sampling: SamplingParams
+    ) -> List[Completion]:
         toks, lens = self.scheduler.pad_batch(batch)
         B, S = toks.shape
         max_new = max(r.max_new_tokens for r in batch)
@@ -325,22 +445,19 @@ class InferenceEngine:
 
         inter_ms = 0.0
         if self.session is not None:
-            inter_ms = self._activate_plan(
-                Workload(batch=B, prompt=S, gen=max_new))
+            inter_ms = self._activate_plan(Workload(batch=B, prompt=S, gen=max_new))
         self._plan_ran = True
-        prefill_fn, _ = self._fns(self._sharding_for("prefill"))
+        prefill_fn = self._prefill_fn(self._sharding_for("prefill"))
 
         t0 = time.perf_counter()
-        logits, cache = prefill_fn(self.params,
-                                   {"tokens": jnp.asarray(toks)},
-                                   max_len)
+        logits, cache = prefill_fn(self.params, {"tokens": jnp.asarray(toks)}, max_len)
         logits.block_until_ready()
         prefill_ms = (time.perf_counter() - t0) * 1e3
 
         transition_ms = inter_ms + self.transition_expert_layout()
         self.stats.transition_ms_total += transition_ms
         self.stats.last_transition_ms = transition_ms
-        _, decode_fn = self._fns(self._sharding_for("decode"))
+        decode_fn = self._decode_fn(self._sharding_for("decode"))
 
         key = jax.random.PRNGKey(sampling.seed)
         generated = np.zeros((B, max_new), np.int32)
@@ -348,8 +465,7 @@ class InferenceEngine:
         next_tok = sample(logits, sampling, key)
         done = np.zeros((B,), bool)
         for step in range(max_new):
-            generated[:, step] = np.where(done, self.eos_id,
-                                          np.asarray(next_tok))
+            generated[:, step] = np.where(done, self.eos_id, np.asarray(next_tok))
             if step == max_new - 1:
                 break
             key, sub = jax.random.split(key)
@@ -364,26 +480,33 @@ class InferenceEngine:
         comps = []
         for i, r in enumerate(batch):
             n = min(r.max_new_tokens, max_new)
-            toks_out = [int(t) for t in generated[i, :n]
-                        if t != self.eos_id or self.eos_id < 0]
-            comps.append(Completion(r.uid, toks_out, prefill_ms,
-                                    decode_ms, transition_ms))
+            toks_out = [
+                int(t) for t in generated[i, :n] if t != self.eos_id or self.eos_id < 0
+            ]
+            comps.append(
+                Completion(r.uid, toks_out, prefill_ms, decode_ms, transition_ms)
+            )
         return comps
 
     # -- continuous batching: decode-time joins ---------------------------
-    def serve_continuous(self, sampling: Optional[SamplingParams] = None
-                         ) -> List[Completion]:
+    def serve_continuous(
+        self, sampling: Optional[SamplingParams] = None
+    ) -> List[Completion]:
         """Drain the queue with continuous batching; uid-ordered completions.
 
-        Each iteration admits whatever fits into freed slots (``admit``),
-        runs ONE decode step over the full slot set (``step_decode``) and
-        frees finished rows (``retire``) — short requests no longer idle
-        behind long ones. Greedy outputs match per-request solo runs
-        exactly: every request is prefilled at its own prompt bucket, so
-        its padding — and hence its numerics — is identical to a solo
-        run (stochastic sampling draws an independent per-request key
-        chain and is not comparable across the two loops). See
-        DESIGN.md §4b for the admit/step/retire state machine.
+        Each iteration admits whatever fits (``admit`` — paged: enough
+        free KV blocks; contiguous fallback: enough slot capacity), runs
+        ONE fused step (``step``: the head joiner's next prefill chunk
+        and/or a decode step over the full slot set) and frees finished
+        rows (``retire``) — short requests no longer idle behind long
+        ones, and a join stalls decode for at most one chunk. Greedy
+        outputs match per-request solo runs exactly: every request is
+        prefilled at its own prompt bucket and chunk boundaries only
+        re-tile the same causal attention (masked positions contribute
+        exact zeros), so its numerics are identical to a solo run
+        (stochastic sampling draws an independent per-request key chain
+        and is not comparable across the two loops). See DESIGN.md §4b
+        for the admit/step/retire state machine.
         """
         sampling = sampling if sampling is not None else SamplingParams()
         key = jax.random.PRNGKey(sampling.seed)
@@ -392,43 +515,89 @@ class InferenceEngine:
             if self._live is None:
                 self._begin_live_batch()
             self.admit(sampling)
-            out.extend(self.retire())    # zero/one-token budgets end here
-            if not self._live.active():
+            out.extend(self.retire())  # zero-token budgets end here
+            key, sub = jax.random.split(key)
+            if not self.step(sampling, sub):
                 # nothing runnable: the queue head (if any) outgrows this
                 # generation's KV capacity — drain and resize.
                 self._live = None
                 continue
-            key, sub = jax.random.split(key)
-            self.step_decode(sampling, sub)
             out.extend(self.retire())
         return sorted(out, key=lambda c: c.uid)
 
     def _begin_live_batch(self) -> None:
-        """Size a fresh live batch from the current queue: KV capacity is
-        the largest queued request's need (padded prompt + output budget
-        + 1), rounded up to the padding bucket so repeat capacities hit
-        the same jit cache entry."""
+        """Size a fresh live batch from the current queue.
+
+        Paged: the block-table width covers the largest queued request's
+        need and the block pool holds the *sum* of queued needs (capped
+        at every slot full-length) — mixed-length requests share one pool
+        instead of each slot reserving the worst case. Contiguous
+        fallback: per-slot KV capacity is the largest queued need,
+        rounded up to the padding bucket so repeat capacities hit the
+        same jit cache entry.
+        """
         sch = self.scheduler
-        need = max(sch.kv_need(r) for r in sch.queued())
-        self._live = _LiveBatch(
-            kv_capacity=round_up(need, sch.bucket),
-            slots=[None] * sch.max_batch,
-            pos=np.zeros((sch.max_batch,), np.int32),
-            next_tok=np.zeros((sch.max_batch,), np.int32))
+        queued = sch.queued()
+        cap = round_up(max(sch.kv_need(r) for r in queued), sch.bucket)
+        nslots = sch.max_batch
+        if self.paged:
+            bs = self.kv_block_size
+            max_blocks = blocks_for(cap, bs)
+            needs = [blocks_for(sch.kv_need(r), bs) for r in queued]
+            pool = (
+                self.kv_blocks
+                if self.kv_blocks is not None
+                else min(sum(needs), nslots * max_blocks)
+            )
+            pool = max(pool, max(needs))  # the head must stay admittable
+            self._live = _LiveBatch(
+                kv_capacity=max_blocks * bs,
+                slots=[None] * nslots,
+                pos=np.zeros((nslots,), np.int32),
+                next_tok=np.zeros((nslots,), np.int32),
+                allocator=BlockAllocator(pool + 1, bs),
+                max_blocks=max_blocks,
+                tables=np.full((nslots, max_blocks), TRASH_BLOCK, np.int32),
+                cache=init_paged_cache(
+                    self.cfg,
+                    nslots,
+                    pool + 1,
+                    bs,
+                    max_blocks,
+                    dtype=self.params["embed"].dtype,
+                    plan=self._sharding_for("decode"),
+                ),
+            )
+            log.info(
+                "live batch: %d slots, %d KV blocks x %d tokens (+trash), "
+                "tables %d blocks wide",
+                nslots,
+                pool,
+                bs,
+                max_blocks,
+            )
+        else:
+            self._live = _LiveBatch(
+                kv_capacity=cap,
+                slots=[None] * nslots,
+                pos=np.zeros((nslots,), np.int32),
+                next_tok=np.zeros((nslots,), np.int32),
+            )
+            log.info("live batch: %d slots, KV capacity %d tokens", nslots, cap)
         self.stats.batches += 1
-        log.info("live batch: %d slots, KV capacity %d tokens",
-                 sch.max_batch, self._live.kv_capacity)
 
     def admit(self, sampling: SamplingParams) -> List[int]:
         """Admit queue-head requests into freed slots at a step boundary.
 
-        Strict head-of-line FIFO: each fitting head is prefilled at its
-        own prompt bucket and left-aligned into the lowest free slot.
-        Every admission re-buckets the *live* workload (active rows ×
-        max padded prompt × max output budget) through the session, so a
-        plan switch — and its Eq.-6 reshard/INT4-restore transition —
-        fires mid-stream when the workload class changes. Returns the
-        joined slot indices.
+        Strict head-of-line FIFO. Paged: admission checks *free blocks*
+        (``next_fit_blocks``) and queues the prompt as prefill chunks —
+        the actual compute happens one chunk per ``step``. Contiguous
+        fallback: the head must fit the slot KV capacity and is prefilled
+        whole, here. Every admission re-buckets the *live* workload
+        (live rows x max padded prompt x max output budget) through the
+        session, so a plan switch — and its Eq.-6 reshard/INT4-restore
+        transition — fires mid-stream when the workload class changes.
+        Returns the joined slot indices.
         """
         live = self._live
         joined: List[int] = []
@@ -436,37 +605,84 @@ class InferenceEngine:
             free = [i for i, s in enumerate(live.slots) if s is None]
             if not free:
                 break
-            r = self.scheduler.next_fit(live.kv_capacity)
+            if self.paged:
+                r = self.scheduler.next_fit_blocks(live.allocator, live.kv_capacity)
+            else:
+                r = self.scheduler.next_fit(live.kv_capacity)
             if r is None:
                 break
             self._admit_one(free[0], r, sampling)
             joined.append(free[0])
         return joined
 
-    def _admit_one(self, i: int, r: QueuedRequest,
-                   sampling: SamplingParams) -> None:
+    def _replan_on_join(self, phase: str = "prefill") -> float:
+        """Re-bucket the live workload through the session at admission
+        time (Eq.-6 transitions fire mid-stream); returns transition ms."""
+        inter_ms = 0.0
+        if self.session is not None:
+            rows = [s for s in self._live.slots if s is not None]
+            inter_ms = self._activate_plan(
+                Workload(
+                    batch=len(rows),
+                    prompt=max(s.start for s in rows),
+                    gen=max(s.req.max_new_tokens for s in rows),
+                ),
+                phase=phase,
+            )
+        self._plan_ran = True
+        return inter_ms
+
+    def _admit_one(self, i: int, r: QueuedRequest, sampling: SamplingParams) -> None:
         live = self._live
         slot = _Slot(req=r, start=self.scheduler.prompt_bucket(r))
         live.slots[i] = slot
         self.stats.joins += 1
 
-        inter_ms = 0.0
-        if self.session is not None:
-            rows = [s for s in live.slots if s is not None]
-            inter_ms = self._activate_plan(Workload(
-                batch=len(rows),
-                prompt=max(s.start for s in rows),
-                gen=max(s.req.max_new_tokens for s in rows)))
-        self._plan_ran = True
+        if self.paged:
+            # reserve the worst-case block budget now (deadlock safety);
+            # blocks materialize lazily as chunks land and decode runs
+            slot.table = BlockTable(live.allocator, self.scheduler.kv_need(r))
+            toks, _ = self.scheduler.pad_batch([r])
+            chunk = self.prefill_chunk or self.scheduler.bucket
+            slot.pending = [
+                toks[0, o : o + chunk] for o in range(0, toks.shape[1], chunk)
+            ]
+            live.tables[i, :] = TRASH_BLOCK
+            live.pos[i] = 0
+            live.next_tok[i] = 0
+            # decode-phase activation: a switching plan serves fused
+            # chunk+decode steps under its decode layout, and a reused
+            # plan's experts are already there — no layout round-trip
+            # (DESIGN.md §4b)
+            first = not self._plan_ran
+            slot.transition_ms = self._replan_on_join(phase="decode")
+            if self.session is None and first:
+                # sessionless engine with a pinned switching plan: enter
+                # the decode layout once, at the first admission
+                slot.transition_ms += self.transition_expert_layout()
+            self.stats.transition_ms_total += slot.transition_ms
+            self.stats.last_transition_ms = slot.transition_ms
+            log.info(
+                "join uid=%d slot=%d start=%d chunks=%d blocks<=%d (queued %d)",
+                r.uid,
+                i,
+                slot.start,
+                len(slot.pending),
+                slot.table.budget_blocks,
+                len(self.scheduler),
+            )
+            return
+
+        inter_ms = self._replan_on_join()
 
         # prefill alone at this request's own bucket (B=1: a bounded set
         # of prefill shapes, and numerics identical to a solo run)
-        prefill_fn, _ = self._fns(self._sharding_for("prefill"))
+        prefill_fn = self._prefill_fn(self._sharding_for("prefill"))
         toks, _ = self.scheduler.pad_batch([r])
         t0 = time.perf_counter()
-        logits, sub_cache = prefill_fn(self.params,
-                                       {"tokens": jnp.asarray(toks)},
-                                       live.kv_capacity)
+        logits, sub_cache = prefill_fn(
+            self.params, {"tokens": jnp.asarray(toks)}, live.kv_capacity
+        )
         logits.block_until_ready()
         slot.prefill_ms = (time.perf_counter() - t0) * 1e3
 
@@ -477,39 +693,151 @@ class InferenceEngine:
         if live.cache is None:
             n = len(live.slots)
             live.cache = init_cache(
-                self.cfg, n, live.kv_capacity,
+                self.cfg,
+                n,
+                live.kv_capacity,
                 dtype=self.params["embed"].dtype,
-                plan=self._sharding_for("decode"))
+                plan=self._sharding_for("decode"),
+            )
             live.cache = live.cache._replace(pos=jnp.zeros((n,), jnp.int32))
         live.cache = merge_cache_rows(live.cache, sub_cache, [i])
 
-        tok0 = int(np.asarray(sample(
-            logits, sampling,
-            jax.random.fold_in(jax.random.PRNGKey(sampling.seed),
-                               r.uid)))[0])
+        tok0 = int(
+            np.asarray(
+                sample(
+                    logits,
+                    sampling,
+                    jax.random.fold_in(jax.random.PRNGKey(sampling.seed), r.uid),
+                )
+            )[0]
+        )
         live.pos[i] = slot.start
         live.next_tok[i] = tok0
         if r.max_new_tokens >= 1:
             slot.tokens.append(tok0)
-        log.info("join uid=%d slot=%d start=%d (queued %d)",
-                 r.uid, i, slot.start, len(self.scheduler))
+        log.info(
+            "join uid=%d slot=%d start=%d (queued %d)",
+            r.uid,
+            i,
+            slot.start,
+            len(self.scheduler),
+        )
 
-    def step_decode(self, sampling: SamplingParams, key=None) -> None:
-        """One decode step over the FULL slot set (freed/done rows are
-        frozen host-side): constant decode shapes per (plan, slot count),
-        so joins and retirements never trigger a recompile."""
+    # -- the per-iteration step ------------------------------------------
+    def step(self, sampling: SamplingParams, key=None) -> bool:
+        """Advance the live batch by one iteration: the FIFO-first
+        joiner's next prefill chunk fused with a decode step when live
+        rows exist (paged path), else whichever of the two applies.
+        Returns False when nothing is runnable (drain-and-resize)."""
         live = self._live
+        pending = live.prefilling()
         active = live.active()
-        _, decode_fn = self._fns(self._sharding_for("decode"),
-                                 slots=len(live.slots))
+        if not pending and not active:
+            return False
+        if pending:
+            i = min(pending, key=lambda j: live.slots[j].req.uid)
+            self._prefill_chunk_step(i, active, sampling, key)
+        else:
+            self.step_decode(sampling, key)
+        return True
+
+    def _ensure_blocks(self, i: int, n_tokens: int) -> None:
+        """Lazy block allocation: grow row ``i``'s table to cover
+        ``n_tokens`` cache rows and refresh the host table mirror."""
+        live = self._live
+        s = live.slots[i]
+        if s is None or s.table is None:
+            return
+        if s.table.capacity_tokens < n_tokens:
+            s.table.ensure_tokens(n_tokens)
+            live.tables[i] = s.table.padded(live.max_blocks)
+
+    def _pinned_cache(self):
+        """The live cache with host-side pos (and block tables) pinned in,
+        so drained slots stay frozen while live rows advance."""
+        live = self._live
         cache = live.cache._replace(pos=jnp.asarray(live.pos))
+        if self.paged:
+            cache = cache._replace(block_tables=jnp.asarray(live.tables))
+        return cache
+
+    def _prefill_chunk_step(
+        self, i: int, active: List[int], sampling: SamplingParams, key
+    ) -> None:
+        """Process the joining row's next prompt chunk; fuse it with a
+        decode step over the live rows when there are any and the chunk
+        is not the last (the final chunk's logits feed sampling, which
+        the fused entry does not return)."""
+        live = self._live
+        s = live.slots[i]
+        chunk = s.pending.pop(0)
+        C = len(chunk)
+        final = not s.pending
+        self._ensure_blocks(i, s.filled + C)
+        plan = self._sharding_for("decode")
+        self.stats.prefill_chunks += 1
+
+        if active and not final:
+            for j in active:
+                self._ensure_blocks(j, int(live.pos[j]) + 1)
+            fn = self._fused_fn(plan)
+            t0 = time.perf_counter()
+            logits, live.cache = fn(
+                self.params,
+                jnp.asarray(chunk)[None, :],
+                i,
+                jnp.asarray(live.next_tok)[:, None],
+                self._pinned_cache(),
+            )
+            toks = np.asarray(sample(logits, sampling, key))
+            step_ms = (time.perf_counter() - t0) * 1e3
+            s.filled += C
+            live.pos[i] = s.filled
+            # the fused step's wall time is booked once, as the active
+            # rows' decode step (the chunk rides along for free); the
+            # joiner's prefill_ms counts only its unfused chunk steps
+            self.stats.decode_steps += 1
+            self.stats.fused_steps += 1
+            self._apply_sampled(toks, active, step_ms)
+            return
+
+        fn = self._chunk_fn(plan)
         t0 = time.perf_counter()
-        logits, live.cache = decode_fn(self.params,
-                                       jnp.asarray(live.next_tok)[:, None],
-                                       cache)
-        toks = np.asarray(sample(logits, sampling, key))
-        step_ms = (time.perf_counter() - t0) * 1e3
-        self.stats.decode_steps += 1
+        logits, live.cache = fn(
+            self.params, jnp.asarray(chunk)[None, :], i, self._pinned_cache()
+        )
+        logits.block_until_ready()
+        s.filled += C
+        live.pos[i] = s.filled
+        s.prefill_ms += (time.perf_counter() - t0) * 1e3
+        if final:
+            # same per-request key chain as a solo run's prefill sample
+            tok0 = int(
+                np.asarray(
+                    sample(
+                        logits,
+                        sampling,
+                        jax.random.fold_in(
+                            jax.random.PRNGKey(sampling.seed), s.req.uid
+                        ),
+                    )
+                )[0]
+            )
+            live.next_tok[i] = tok0
+            if s.req.max_new_tokens >= 1:
+                s.tokens.append(tok0)
+            log.info(
+                "prefill complete uid=%d slot=%d (%d tokens, %d blocks)",
+                s.req.uid,
+                i,
+                s.filled,
+                len(s.table),
+            )
+
+    def _apply_sampled(
+        self, toks: np.ndarray, active: List[int], step_ms: float
+    ) -> None:
+        live = self._live
         for i in active:
             s = live.slots[i]
             live.pos[i] += 1
@@ -517,35 +845,84 @@ class InferenceEngine:
             t = int(toks[i])
             live.next_tok[i] = t
             if self.eos_id >= 0 and t == self.eos_id:
-                s.done = True       # stop; EOS is never emitted
+                s.done = True  # stop; EOS is never emitted
                 continue
             s.tokens.append(t)
 
+    def step_decode(self, sampling: SamplingParams, key=None) -> None:
+        """One decode step over the FULL slot set (freed/done rows are
+        frozen host-side): constant decode shapes per (plan, slot count),
+        so joins and retirements never trigger a recompile."""
+        live = self._live
+        active = live.active()
+        if self.paged:
+            for j in active:
+                self._ensure_blocks(j, int(live.pos[j]) + 1)
+        decode_fn = self._decode_fn(self._sharding_for("decode"))
+        t0 = time.perf_counter()
+        logits, live.cache = decode_fn(
+            self.params, jnp.asarray(live.next_tok)[:, None], self._pinned_cache()
+        )
+        toks = np.asarray(sample(logits, sampling, key))
+        step_ms = (time.perf_counter() - t0) * 1e3
+        self.stats.decode_steps += 1
+        self._apply_sampled(toks, active, step_ms)
+
     def retire(self) -> List[Completion]:
         """Free slots whose request hit EOS or its output budget; returns
-        their completions (KV rows are reused by the next join)."""
+        their completions (paged: KV blocks go back to the free pool;
+        contiguous: the row is reused by the next join)."""
         live = self._live
         comps: List[Completion] = []
         if live is None:
             return comps
         for i, s in enumerate(live.slots):
-            if s is None or not (s.done
-                                 or len(s.tokens) >= s.req.max_new_tokens):
+            if s is None or not (s.done or len(s.tokens) >= s.req.max_new_tokens):
                 continue
-            toks = [t for t in s.tokens
-                    if t != self.eos_id or self.eos_id < 0]
-            comps.append(Completion(s.req.uid, toks, s.prefill_ms,
-                                    s.decode_ms, s.transition_ms))
+            toks = [t for t in s.tokens if t != self.eos_id or self.eos_id < 0]
+            comps.append(
+                Completion(s.req.uid, toks, s.prefill_ms, s.decode_ms, s.transition_ms)
+            )
+            if s.table is not None:
+                s.table.free()
+                live.tables[i, :] = TRASH_BLOCK
+            s.pending = []
             live.slots[i] = None
             live.next_tok[i] = 0
-            log.info("retire uid=%d slot=%d (%d tokens)",
-                     s.req.uid, i, len(toks))
+            log.info("retire uid=%d slot=%d (%d tokens)", s.req.uid, i, len(toks))
         return comps
 
 
-def engine_from_hap(cfg: ModelConfig, params, chip: str, n_devices: int,
-                    prompt_len: int, gen_len: int, batch: int,
-                    model=None, plan=None) -> InferenceEngine:
+def _chunk_append(params, cfg: ModelConfig, chunk_tok, row, cache, plan):
+    """Append a B=1 prompt chunk to paged-cache row ``row`` (traced).
+
+    Slices the row's block-table/pos view out of the live cache, runs the
+    multi-token ``decode_step`` append, and splices the updated pages and
+    position back. Returns (last-position logits (1, V), cache)."""
+    sub = cache._replace(
+        block_tables=jax.lax.dynamic_slice_in_dim(cache.block_tables, row, 1, axis=0),
+        pos=jax.lax.dynamic_slice_in_dim(cache.pos, row, 1, axis=0),
+    )
+    logits, sub = decode_step(params, cfg, chunk_tok, sub, plan=plan)
+    cache = cache._replace(
+        k=sub.k,
+        v=sub.v,
+        pos=jax.lax.dynamic_update_slice(cache.pos, sub.pos, (row,)),
+    )
+    return logits, cache
+
+
+def engine_from_hap(
+    cfg: ModelConfig,
+    params,
+    chip: str,
+    n_devices: int,
+    prompt_len: int,
+    gen_len: int,
+    batch: int,
+    model=None,
+    plan=None,
+) -> InferenceEngine:
     """Legacy convenience — now a thin wrapper over ``HAPSession.engine``.
 
     Prefer building a ``HAPSession`` directly: it keeps the planner and
@@ -553,14 +930,17 @@ def engine_from_hap(cfg: ModelConfig, params, chip: str, n_devices: int,
     """
     from repro.core.flops import Workload
     from repro.core.session import HAPSession
+
     # prompt_bucket stays at the legacy 64-token padding granularity —
     # per-batch re-planning adapts to the actual prompt lengths anyway.
-    session = HAPSession(cfg, chip, n_devices, model=model,
-                         prompt_bucket=64, gen_bucket=max(gen_len, 1))
+    session = HAPSession(
+        cfg, chip, n_devices, model=model, prompt_bucket=64, gen_bucket=max(gen_len, 1)
+    )
     eng = session.engine(params, max_batch=batch)
     eng.plan = plan
     # legacy contract: plan eagerly for the stated workload so hap_plan is
     # readable before the first run (batches still re-plan adaptively).
     eng.hap_plan = session.plan_for(
-        Workload(batch=batch, prompt=prompt_len, gen=gen_len))
+        Workload(batch=batch, prompt=prompt_len, gen=gen_len)
+    )
     return eng

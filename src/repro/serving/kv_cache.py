@@ -1,0 +1,172 @@
+"""Paged KV-cache bookkeeping: block allocator + per-request block tables.
+
+The continuous serving loop (DESIGN.md §4b) used to reserve worst-case
+contiguous KV capacity per live-batch slot — ``max_batch`` rows, each as
+long as the *largest* queued request could ever need. This module replaces
+that with block-granular allocation, the standard fix in modern serving
+systems (vLLM-style PagedAttention):
+
+- the physical cache is a shared pool of fixed-size **blocks**
+  (``(L, num_blocks, block_size, Hkv, hd)`` device arrays, built by
+  ``repro.models.init_paged_cache``),
+- each live request owns a **block table** mapping its logical token
+  positions to physical block ids; blocks are allocated on demand as the
+  request's position crosses block boundaries during decode and returned
+  to the free list when the request retires,
+- admission checks **free blocks**, not contiguous slot capacity
+  (``ContinuousScheduler.next_fit_blocks``), so mixed short/long requests
+  share one memory pool instead of each slot paying the worst case.
+
+Block id 0 is the **trash block**: it is never handed out, every unused
+block-table entry points at it, and drained/mid-prefill rows scatter
+their dead writes into it. That keeps the decode step's gather/scatter
+shapes constant (the jit-cache contract) without masking branches.
+
+Deadlock safety: a request *reserves* its worst-case block count
+(padded prompt + output budget + 1 tokens) at admission but only
+materializes blocks lazily. Reserved-but-unallocated blocks are excluded
+from ``can_admit``, so concurrent requests can never strand each other
+mid-decode — ``OutOfBlocks`` is reachable only by allocating past a
+table's own budget.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+TRASH_BLOCK = 0
+
+
+class OutOfBlocks(RuntimeError):
+    """Raised when an allocation exceeds the pool (or a table's budget)."""
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` cache rows (ceil division)."""
+    return -(-max(int(n_tokens), 0) // block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over a fixed pool of KV blocks.
+
+    ``num_blocks`` counts the whole pool *including* the trash block, so
+    ``num_blocks - 1`` blocks are actually allocatable. The free list is
+    a LIFO stack: freshly retired blocks are reused first, which keeps
+    the working set of physical blocks small and makes reuse observable
+    in tests.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one allocatable block + trash")
+        if block_size < 1:
+            raise ValueError("block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # stack: initially pops ascending ids (1, 2, ...); frees push on top
+        self._free: List[int] = list(range(num_blocks - 1, TRASH_BLOCK, -1))
+        self._reserved = 0
+
+    # -- accounting -------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        """Blocks on the free list (some may be spoken for — see below)."""
+        return len(self._free)
+
+    @property
+    def num_reserved(self) -> int:
+        """Blocks promised to live block tables but not yet materialized."""
+        return self._reserved
+
+    @property
+    def num_available(self) -> int:
+        """Blocks admission may promise to a *new* request right now."""
+        return len(self._free) - self._reserved
+
+    def can_admit(self, n_blocks: int) -> bool:
+        return n_blocks <= self.num_available
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    # -- alloc / free (BlockTable-facing) ---------------------------------
+    def _reserve(self, n_blocks: int) -> None:
+        if not self.can_admit(n_blocks):
+            raise OutOfBlocks(
+                f"cannot reserve {n_blocks} blocks "
+                f"({self.num_available} available of {self.num_blocks - 1})"
+            )
+        self._reserved += n_blocks
+
+    def _release(self, n_blocks: int) -> None:
+        self._reserved -= n_blocks
+        assert self._reserved >= 0, "released more reservation than held"
+
+    def _alloc_reserved(self) -> int:
+        """Materialize one reserved block (reservation -> allocation)."""
+        assert self._reserved > 0
+        self._reserved -= 1
+        return self._free.pop()
+
+    def _alloc_extra(self) -> int:
+        """Allocate past a table's reservation — only from truly spare
+        blocks, never from another request's reservation."""
+        if self.num_available < 1:
+            raise OutOfBlocks(
+                f"pool exhausted ({self.num_free} free, "
+                f"{self._reserved} reserved)"
+            )
+        return self._free.pop()
+
+    def _free_blocks(self, blocks: List[int]) -> None:
+        for b in blocks:
+            assert b != TRASH_BLOCK, "freed the trash block"
+            self._free.append(b)
+
+
+class BlockTable:
+    """One request's logical-position -> physical-block mapping.
+
+    Created at admission with a worst-case token ``budget`` (reserved in
+    the allocator); blocks materialize lazily via ``ensure_tokens`` as
+    prefill chunks land and decode advances. ``free()`` returns every
+    block and any unused reservation to the pool.
+    """
+
+    def __init__(self, allocator: BlockAllocator, budget_tokens: int):
+        self.allocator = allocator
+        self.budget_blocks = allocator.blocks_for(budget_tokens)
+        allocator._reserve(self.budget_blocks)
+        self.blocks: List[int] = []
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def capacity_tokens(self) -> int:
+        return len(self.blocks) * self.allocator.block_size
+
+    def ensure_tokens(self, n_tokens: int) -> None:
+        """Grow the table until it covers ``n_tokens`` cache rows."""
+        while self.capacity_tokens < n_tokens:
+            if len(self.blocks) < self.budget_blocks:
+                self.blocks.append(self.allocator._alloc_reserved())
+            else:
+                self.blocks.append(self.allocator._alloc_extra())
+
+    def free(self) -> None:
+        """Return all blocks and any unused reservation to the pool."""
+        self.allocator._free_blocks(self.blocks)
+        self.allocator._release(max(self.budget_blocks - len(self.blocks), 0))
+        self.blocks = []
+        self.budget_blocks = 0
+
+    def padded(self, width: int) -> np.ndarray:
+        """The table as a fixed-width int32 row; unused entries point at
+        the trash block (id 0)."""
+        row = np.full((width,), TRASH_BLOCK, np.int32)
+        n = min(len(self.blocks), width)
+        row[:n] = self.blocks[:n]
+        return row

@@ -1,4 +1,5 @@
 """Token sampling strategies."""
+
 from __future__ import annotations
 
 import dataclasses
@@ -10,13 +11,14 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    temperature: float = 0.0        # 0 => greedy
-    top_k: int = 0                  # 0 => no top-k filter
+    temperature: float = 0.0  # 0 => greedy
+    top_k: int = 0  # 0 => no top-k filter
     seed: int = 0
 
 
-def sample(logits: jax.Array, params: SamplingParams,
-           key: Optional[jax.Array] = None) -> jax.Array:
+def sample(
+    logits: jax.Array, params: SamplingParams, key: Optional[jax.Array] = None
+) -> jax.Array:
     """logits: (B, V) -> (B,) int32 next tokens."""
     if params.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -15,10 +15,13 @@ batches — the serving loop the paper's adaptivity claim asks for.
 ``ContinuousScheduler`` extends the FIFO with decode-time admission
 (continuous batching, DESIGN.md §4b): the engine asks for the queue head
 at decode-step boundaries and admits it into a freed batch slot when its
-KV need fits the live cache. Admission is strict head-of-line FIFO —
+KV need fits — ``next_fit_blocks`` checks the paged cache's free-block
+pool (the default serving path), ``next_fit`` the contiguous per-slot
+capacity (mamba/hybrid fallback). Admission is strict head-of-line FIFO —
 later requests never jump an unadmittable head, so completion order
 tracks submission order.
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -33,13 +36,14 @@ from repro.core.session import round_up
 @dataclasses.dataclass
 class QueuedRequest:
     uid: int
-    prompt: np.ndarray            # (S,) int32
+    prompt: np.ndarray  # (S,) int32
     max_new_tokens: int
 
 
 class FifoScheduler:
-    def __init__(self, max_batch: int = 8, bucket: int = 64,
-                 coalesce_buckets: bool = False):
+    def __init__(
+        self, max_batch: int = 8, bucket: int = 64, coalesce_buckets: bool = False
+    ):
         self.max_batch = max_batch
         self.bucket = max(1, bucket)
         self.coalesce_buckets = coalesce_buckets
@@ -49,8 +53,7 @@ class FifoScheduler:
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32) -> int:
         uid = self._next_uid
         self._next_uid += 1
-        self._q.append(QueuedRequest(uid, np.asarray(prompt, np.int32),
-                                     max_new_tokens))
+        self._q.append(QueuedRequest(uid, np.asarray(prompt, np.int32), max_new_tokens))
         return uid
 
     def __len__(self) -> int:
@@ -82,8 +85,7 @@ class FifoScheduler:
         b0 = self.prompt_bucket(self._q[0])
         batch: List[QueuedRequest] = []
         while self._q and len(batch) < self.max_batch:
-            if (batch and self.coalesce_buckets
-                    and self.prompt_bucket(self._q[0]) != b0):
+            if batch and self.coalesce_buckets and self.prompt_bucket(self._q[0]) != b0:
                 break
             batch.append(self._q.popleft())
         return batch
@@ -102,7 +104,7 @@ class FifoScheduler:
         lens = np.zeros((B,), np.int32)
         for i, r in enumerate(batch):
             if len(r.prompt):
-                toks[i, S - len(r.prompt):] = r.prompt
+                toks[i, S - len(r.prompt) :] = r.prompt
             lens[i] = len(r.prompt)
         return toks, lens
 
@@ -110,15 +112,17 @@ class FifoScheduler:
 class ContinuousScheduler(FifoScheduler):
     """FIFO queue with decode-time admission (continuous batching).
 
-    The continuous engine calls ``next_fit`` at decode-step boundaries:
-    the queue head is admitted — popped, prefilled at its own prompt
-    bucket and left-aligned into a freed slot — only when its KV need
-    (padded prompt + output budget + 1) fits the live cache's sequence
-    capacity. A head that does not fit blocks the queue until the live
+    The continuous engine calls ``next_fit_blocks`` (paged KV, the
+    default) or ``next_fit`` (contiguous fallback) at decode-step
+    boundaries: the queue head is admitted — popped and left-aligned into
+    a freed slot — only when its worst-case KV need fits. A head that
+    does not fit the *logical width* blocks the queue until the live
     batch drains and a fresh cache is sized for it (strict FIFO — no
-    reordering). Requests with *different* prompt buckets coexist in one
-    live batch: each row keeps its own padded start position, so
-    ``coalesce_buckets`` only governs the static ``next_batch`` path.
+    reordering); a head short only on *free blocks* becomes admittable as
+    soon as retirements return blocks to the pool. Requests with
+    different prompt buckets coexist in one live batch: each row keeps
+    its own padded start position, so ``coalesce_buckets`` only governs
+    the static ``next_batch`` path.
     """
 
     def kv_need(self, r: QueuedRequest) -> int:
@@ -129,5 +133,21 @@ class ContinuousScheduler(FifoScheduler):
         """Pop the queue head iff it fits ``kv_capacity``, else None."""
         head = self.peek()
         if head is None or self.kv_need(head) > kv_capacity:
+            return None
+        return self._q.popleft()
+
+    def next_fit_blocks(self, allocator, max_tokens: int) -> Optional[QueuedRequest]:
+        """Paged admission: pop the queue head iff its worst-case KV need
+        fits the block-table width (``max_tokens``) AND the allocator can
+        reserve enough free blocks for it — the block-granular replacement
+        for the contiguous ``next_fit`` capacity check. A head blocked on
+        blocks (not width) becomes admittable as live rows retire."""
+        head = self.peek()
+        if head is None:
+            return None
+        need = self.kv_need(head)
+        if need > max_tokens:
+            return None
+        if not allocator.can_admit(allocator.blocks_for(need)):
             return None
         return self._q.popleft()

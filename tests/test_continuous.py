@@ -171,6 +171,96 @@ def test_forced_bucket_change_triggers_one_transition(moe_setup):
     assert eng.stats.replans == 1
 
 
+def test_chunked_prefill_greedy_equivalence(moe_setup):
+    """Chunked prefill (several chunk sizes, incl. ones that straddle
+    block boundaries) must reproduce the unchunked solo-run outputs
+    token for token."""
+    cfg, params = moe_setup
+    reqs = [(list(range(1, 40)), 6), ([2, 7, 1, 8], 5)]
+    solo = []
+    for p, g in reqs:
+        eng = _session(cfg).engine(params, max_batch=1)
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+        solo.append(eng.run()[0].tokens)
+    for chunk in (8, 16, 48):
+        eng = _session(cfg).engine(params, max_batch=2,
+                                   prefill_chunk=chunk, kv_block_size=8)
+        for p, g in reqs:
+            eng.submit(Request(prompt=p, max_new_tokens=g))
+        comps = eng.serve_continuous()
+        assert [c.tokens
+                for c in sorted(comps, key=lambda c: c.uid)] == solo
+        # prompt 39 pads to 48: ceil(48/chunk) chunks for it, 48//... and
+        # the short prompt pads to 16
+        assert eng.stats.prefill_chunks == \
+            -(-48 // chunk) + max(16 // chunk, 1)
+
+
+def test_join_never_stalls_decode_more_than_one_chunk(moe_setup):
+    """The acceptance stall test: a mid-stream join of a long prompt must
+    NOT execute its full prefill in one step — it lands chunk by chunk,
+    each (except the last) fused with a live decode step, so the resident
+    request keeps emitting tokens throughout the join window."""
+    cfg, params = moe_setup
+    eng = _session(cfg).engine(params, max_batch=2, prefill_chunk=16,
+                               kv_block_size=8)
+    eng.submit(Request(prompt=[5, 3, 2], max_new_tokens=12))
+    eng.submit(Request(prompt=list(range(1, 55)), max_new_tokens=4))
+    comps = eng.serve_continuous()
+    assert [len(c.tokens) for c in comps] == [12, 4]
+    # the 54-token prompt pads to 64 -> 4 chunks of 16, never one step
+    # of 64; the resident request's prefill is its own single chunk
+    assert eng.stats.prefill_chunks == 4 + 1
+    # fusion: at least 3 of the long join's chunks ran IN THE SAME step
+    # as a live decode token (the final chunk is unfused by design), so
+    # the join stalled decode for at most one chunk
+    assert eng.stats.fused_steps >= 3
+    # total decode steps stay within the overlapped budget: 11 steps for
+    # uid=0 after its prefill sample + 3 for uid=1, minus the >=3 fused
+    assert eng.stats.decode_steps <= 11 + 3
+
+
+def test_paged_pool_is_smaller_than_worst_case(moe_setup):
+    """The block pool holds the SUM of queued needs, not slots x the
+    largest need — the memory claim of paged allocation."""
+    cfg, params = moe_setup
+    eng = _session(cfg).engine(params, max_batch=4, kv_block_size=8)
+    eng.submit(Request(prompt=list(range(1, 55)), max_new_tokens=8))  # 73
+    for _ in range(3):
+        eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=2))       # 19
+    eng._begin_live_batch()
+    live = eng._live
+    # contiguous worst case: 4 slots x 80-token capacity = 320 tokens;
+    # paged pool: sum of needs in blocks = 10 + 3*3 = 19 blocks = 152
+    assert live.kv_capacity == 80                   # logical width only
+    assert live.allocator.num_blocks - 1 == 19
+    assert 19 * 8 < 4 * 80
+    eng._live = None
+
+
+def test_paged_admission_has_no_layout_roundtrip(moe_setup):
+    """A reused *switching* plan on the paged path must relayout the
+    experts exactly once (decode-phase entry at the first admission) —
+    not a prefill-restore + decode-switch round-trip per join."""
+    cfg, params = moe_setup
+    session = _session(cfg, source=fixed_plan("TP1", "EP2", "TP1"))
+    session.transition_between = lambda old, new, w: ("none", 0.0)
+    eng = session.engine(params, max_batch=2)
+    assert eng.hap_plan is None or eng.hap_plan.switches
+    calls = []
+    orig = eng._relayout_experts
+    eng._relayout_experts = \
+        lambda mech, sp: (calls.append(mech), orig(mech, sp))[1]
+    for p, g in (([1, 2, 3], 4), ([4, 5], 3), ([6, 7, 8, 9], 2)):
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+    comps = eng.serve_continuous()
+    assert [len(c.tokens) for c in comps] == [4, 3, 2]
+    # one decode-layout entry at the initial activation; later joins of
+    # the same cached plan move nothing (null mesh: the call is the
+    # mechanism-selection no-op, but the COUNT is the contract)
+    assert calls == ["reshard"]
+
+
 def test_continuous_honors_eos(moe_setup):
     """A decode-sampled EOS retires the row early; EOS never appears in
     the completion (same contract as the lockstep loop)."""

@@ -1,0 +1,325 @@
+"""Paged KV cache: block allocator, block tables, and the paged model
+primitives (gather/scatter decode, chunked append, paged merge).
+
+Covers the DESIGN.md §4b paged-serving invariants: fragmentation then
+reuse after retire, admission refusal when free blocks are insufficient,
+deadlock-safe reservation accounting, and block-table correctness under
+interleaved join/retire — ending with token-exact greedy equivalence of
+the full engine against per-request solo runs on a deliberately tiny
+block pool.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core import HAPSession
+from repro.core.hap import fixed_plan
+from repro.models import (decode_step, init_paged_cache, init_params,
+                          merge_cache_rows, prefill)
+from repro.serving import Request
+from repro.serving.kv_cache import (TRASH_BLOCK, BlockAllocator, BlockTable,
+                                    OutOfBlocks, blocks_for)
+from repro.serving.scheduler import ContinuousScheduler
+
+
+# ---------------------------------------------------------------------------
+# allocator bookkeeping (pure host logic)
+# ---------------------------------------------------------------------------
+def test_blocks_for_ceil():
+    assert blocks_for(0, 8) == 0
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+
+
+def test_allocator_reserve_alloc_free_accounting():
+    a = BlockAllocator(num_blocks=9, block_size=4)   # 8 allocatable + trash
+    assert a.num_free == 8 and a.num_available == 8
+    t = BlockTable(a, budget_tokens=16)              # 4 blocks reserved
+    assert a.num_reserved == 4 and a.num_available == 4
+    t.ensure_tokens(6)                               # 2 blocks materialized
+    assert len(t) == 2 and a.num_free == 6 and a.num_reserved == 2
+    assert TRASH_BLOCK not in t.blocks
+    t.free()
+    assert a.num_free == 8 and a.num_reserved == 0 and len(t) == 0
+
+
+def test_admission_refused_when_blocks_insufficient():
+    """can_admit must respect reservations: blocks promised to a live
+    request are not available to a new one, even while still free."""
+    a = BlockAllocator(num_blocks=9, block_size=4)
+    t1 = BlockTable(a, budget_tokens=24)             # reserves 6 of 8
+    assert a.can_admit(2) and not a.can_admit(3)
+    with pytest.raises(OutOfBlocks):
+        BlockTable(a, budget_tokens=16)              # needs 4 > 2 available
+    t1.free()
+    assert a.can_admit(8)
+
+
+def test_table_never_starves_within_budget_but_oom_beyond():
+    a = BlockAllocator(num_blocks=5, block_size=2)   # 4 allocatable
+    t1 = BlockTable(a, budget_tokens=4)              # 2 blocks
+    t2 = BlockTable(a, budget_tokens=4)              # 2 blocks
+    t2.ensure_tokens(4)                              # materialize all of t2
+    t1.ensure_tokens(4)                              # t1's promise still holds
+    assert len(t1) == 2 and len(t2) == 2 and a.num_free == 0
+    with pytest.raises(OutOfBlocks):
+        t1.ensure_tokens(6)                          # beyond budget, pool dry
+    t2.free()
+    t1.ensure_tokens(6)                              # spare blocks now exist
+    assert len(t1) == 3
+
+
+def test_fragmentation_then_reuse_after_retire():
+    """Retired blocks go back on the free list (LIFO) and are handed to
+    the next request even when the survivor fragments the id space."""
+    a = BlockAllocator(num_blocks=7, block_size=4)
+    t1 = BlockTable(a, budget_tokens=8)
+    t2 = BlockTable(a, budget_tokens=8)
+    t1.ensure_tokens(5)                              # blocks [1, 2]
+    t2.ensure_tokens(5)                              # blocks [3, 4]
+    assert (t1.blocks, t2.blocks) == ([1, 2], [3, 4])
+    t1.free()                                        # frees 1, 2 around t2
+    t3 = BlockTable(a, budget_tokens=8)
+    t3.ensure_tokens(8)
+    assert set(t3.blocks) == {1, 2}                  # reuse, not fresh ids
+    assert t2.blocks == [3, 4]                       # survivor untouched
+
+
+def test_padded_table_row_trash_filled():
+    a = BlockAllocator(num_blocks=5, block_size=4)
+    t = BlockTable(a, budget_tokens=8)
+    t.ensure_tokens(4)
+    row = t.padded(4)
+    assert row.dtype == np.int32 and row.shape == (4,)
+    assert row[0] == t.blocks[0]
+    assert (row[1:] == TRASH_BLOCK).all()
+
+
+def test_scheduler_next_fit_blocks():
+    """Block-granular admission: the head is popped only when both the
+    table width and the free-block pool can take it."""
+    sch = ContinuousScheduler(max_batch=4, bucket=8)
+    sch.submit(list(range(1, 10)), max_new_tokens=4)   # need 16+4+1 = 21
+    a = BlockAllocator(num_blocks=3, block_size=8)     # 2 allocatable
+    assert sch.next_fit_blocks(a, max_tokens=64) is None   # needs 3 blocks
+    assert len(sch) == 1                                   # nothing popped
+    big = BlockAllocator(num_blocks=9, block_size=8)
+    assert sch.next_fit_blocks(big, max_tokens=16) is None  # width too small
+    got = sch.next_fit_blocks(big, max_tokens=64)
+    assert got is not None and len(sch) == 0
+
+
+# ---------------------------------------------------------------------------
+# paged model primitives
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _paged_from_prefill(cfg, params, toks, block_size, max_blocks, rows,
+                        nslots=2, pool=None, capacity=None):
+    """Prefill contiguously, then scatter the rows into a paged cache via
+    per-row block tables (the merge_cache_rows paged path). ``capacity``
+    is each row's allocated token budget (default: the prompt length)."""
+    B, S = toks.shape
+    cap = capacity or S
+    logits, sub = prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                          max_len=S)
+    alloc = BlockAllocator((pool or nslots * max_blocks) + 1, block_size)
+    tables = np.full((nslots, max_blocks), TRASH_BLOCK, np.int32)
+    handles = []
+    for r in rows:
+        t = BlockTable(alloc, budget_tokens=cap)
+        t.ensure_tokens(cap)
+        tables[r] = t.padded(max_blocks)
+        handles.append(t)
+    cache = init_paged_cache(cfg, nslots, alloc.num_blocks, block_size,
+                             max_blocks, dtype=params["embed"].dtype)
+    cache = cache._replace(block_tables=jnp.asarray(tables))
+    cache = merge_cache_rows(cache, sub, rows)
+    pos = np.zeros((nslots,), np.int32)
+    pos[list(rows)] = S
+    cache = cache._replace(pos=jnp.asarray(pos))
+    return logits, cache, alloc, handles
+
+
+def test_paged_decode_matches_contiguous(moe_setup):
+    """merge + block-table gather/scatter must reproduce the contiguous
+    decode logits for several steps."""
+    cfg, params = moe_setup
+    toks = np.arange(1, 17, dtype=np.int32).reshape(2, 8)
+    logits_c, cache_c = prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                                max_len=16)
+    cache_c = cache_c._replace(pos=jnp.full((2,), 8, jnp.int32))
+    logits_p, cache_p, _, _ = _paged_from_prefill(
+        cfg, params, toks, block_size=4, max_blocks=4, rows=[0, 1],
+        capacity=16)
+    np.testing.assert_allclose(np.asarray(logits_c), np.asarray(logits_p),
+                               rtol=1e-5, atol=1e-5)
+    tok = jnp.argmax(logits_c, -1)[:, None].astype(jnp.int32)
+    for _ in range(5):
+        l_c, cache_c = decode_step(params, cfg, tok, cache_c)
+        l_p, cache_p = decode_step(params, cfg, tok, cache_p)
+        np.testing.assert_allclose(np.asarray(l_c), np.asarray(l_p),
+                                   rtol=1e-5, atol=1e-5)
+        tok = jnp.argmax(l_c, -1)[:, None].astype(jnp.int32)
+    assert int(cache_p.pos[0]) == 13
+
+
+def test_chunked_append_matches_prefill(moe_setup):
+    """Feeding the prompt through multi-token decode_step chunks must
+    reproduce the whole-prompt prefill logits (greedy-exact), including
+    uneven chunk splits that straddle block boundaries."""
+    cfg, params = moe_setup
+    toks = np.arange(1, 13, dtype=np.int32).reshape(1, 12)
+    logits_ref, _ = prefill(params, cfg, {"tokens": jnp.asarray(toks)},
+                            max_len=12)
+    for splits in ((4, 4, 4), (5, 7), (3, 6, 3)):
+        alloc = BlockAllocator(6, block_size=4)
+        table = BlockTable(alloc, budget_tokens=16)
+        table.ensure_tokens(12)
+        cache = init_paged_cache(cfg, 1, 6, 4, 4,
+                                 dtype=params["embed"].dtype)
+        cache = cache._replace(
+            block_tables=jnp.asarray(table.padded(4)[None, :]),
+            pos=jnp.zeros((1,), jnp.int32))
+        off = 0
+        for n in splits:
+            logits, cache = decode_step(
+                params, cfg, jnp.asarray(toks[:, off:off + n]), cache)
+            off += n
+        np.testing.assert_allclose(np.asarray(logits_ref),
+                                   np.asarray(logits), rtol=1e-5, atol=1e-5)
+        assert int(cache.pos[0]) == 12
+
+
+def test_block_tables_interleaved_join_retire(moe_setup):
+    """A freed row's blocks, reused by a later join, must not perturb the
+    survivor: decode the survivor alone vs alongside churned neighbors."""
+    cfg, params = moe_setup
+    toks = np.arange(1, 17, dtype=np.int32).reshape(2, 8)
+    _, ref_cache = prefill(params, cfg,
+                           {"tokens": jnp.asarray(toks[:1])}, max_len=16)
+    ref_cache = ref_cache._replace(pos=jnp.full((1,), 8, jnp.int32))
+    _logits, cache, alloc, handles = _paged_from_prefill(
+        cfg, params, toks, block_size=4, max_blocks=4, rows=[0, 1],
+        pool=8, capacity=16)                 # pool exactly full
+    old_row1 = np.asarray(cache.block_tables)[1].tolist()
+    # retire row 1: its blocks return to the pool...
+    handles[1].free()
+    tables = np.asarray(cache.block_tables).copy()
+    tables[1, :] = TRASH_BLOCK
+    # ...and a new join claims them for a different prompt
+    t2 = BlockTable(alloc, budget_tokens=16)
+    t2.ensure_tokens(16)
+    assert set(t2.blocks) == set(old_row1)   # reuse of the freed blocks
+    new_prompt = np.arange(21, 29, dtype=np.int32).reshape(1, 8)
+    _, sub2 = prefill(params, cfg,
+                      {"tokens": jnp.asarray(new_prompt)}, max_len=8)
+    tables[1] = t2.padded(4)
+    cache = cache._replace(block_tables=jnp.asarray(tables))
+    cache = merge_cache_rows(cache, sub2, [1])
+
+    tok = jnp.asarray([[7], [9]], jnp.int32)
+    ref_tok = tok[:1]
+    for _ in range(4):
+        l_ref, ref_cache = decode_step(params, cfg, ref_tok, ref_cache)
+        l_two, cache = decode_step(params, cfg, tok, cache)
+        np.testing.assert_allclose(np.asarray(l_ref[0]),
+                                   np.asarray(l_two[0]),
+                                   rtol=1e-5, atol=1e-5)
+        ref_tok = jnp.argmax(l_ref, -1)[:, None].astype(jnp.int32)
+        tok = jnp.concatenate(
+            [ref_tok, jnp.argmax(l_two[1:], -1)[:, None].astype(jnp.int32)])
+
+
+# ---------------------------------------------------------------------------
+# engine-level: tiny pool, staged admission, solo equivalence
+# ---------------------------------------------------------------------------
+def _session(cfg):
+    return HAPSession(cfg, "a6000", 1, source=fixed_plan("TP1", "TP1"),
+                      prompt_bucket=16, gen_bucket=8)
+
+
+def test_engine_tiny_pool_staged_admission(moe_setup):
+    """A pool sized for one request at a time: admission must wait for
+    blocks freed at retirement, reuse them, and stay token-exact."""
+    cfg, params = moe_setup
+    reqs = [([1, 2, 3, 4], 6), ([9, 8, 7], 6), ([2, 4, 6, 8, 1], 4)]
+    solo = []
+    for p, g in reqs:
+        e1 = _session(cfg).engine(params, max_batch=1)
+        e1.submit(Request(prompt=p, max_new_tokens=g))
+        solo.append(e1.run()[0].tokens)
+
+    eng = _session(cfg).engine(params, max_batch=3, kv_block_size=8,
+                               kv_blocks=4)          # one request's worth
+    for p, g in reqs:
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+    comps = eng.serve_continuous()
+    assert [c.tokens for c in sorted(comps, key=lambda c: c.uid)] == solo
+    # blocks forced strict serialization: never two live rows at once,
+    # yet all requests flowed through ONE live-batch generation
+    assert eng.stats.batches == 1 and eng.stats.joins == 3
+    assert eng._live is None
+
+
+def test_paged_continuous_on_sharded_mesh():
+    """Paged serve_continuous under a real heads-sharded TP mesh must
+    stay token-exact vs solo runs ON THE SAME MESH (null-mesh outputs
+    differ in psum reduction order, so the solo reference shares the
+    mesh). Subprocess: forced host devices, like the bridge tests."""
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.path.join(root, "src"))
+    code = textwrap.dedent("""
+        import dataclasses, jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.core import HAPSession
+        from repro.core.hap import fixed_plan
+        from repro.models import init_params
+        from repro.serving import Request
+
+        cfg = dataclasses.replace(get_config('deepseek-moe-16b').reduced(),
+                                  dtype='float32', capacity_factor=8.0)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 2),
+                    ('data', 'model'))
+
+        def session():
+            return HAPSession(cfg, 'a6000', 2,
+                              source=fixed_plan('TP2', 'TP2'), mesh=mesh,
+                              prompt_bucket=16, gen_bucket=8)
+
+        reqs = [([3, 1, 4, 1, 5], 3), (list(range(1, 20)), 2)]
+        solo = {}
+        for uid, (p, g) in enumerate(reqs):
+            eng = session().engine(params, max_batch=1)
+            eng.submit(Request(prompt=p, max_new_tokens=g))
+            solo[uid] = eng.run()[0].tokens
+        eng = session().engine(params, max_batch=2, prefill_chunk=16,
+                               kv_block_size=8)
+        for p, g in reqs:
+            eng.submit(Request(prompt=p, max_new_tokens=g))
+        got = {c.uid: c.tokens for c in eng.serve_continuous()}
+        assert eng._sharding_for('decode').kv_shard == 'heads'
+        assert got == solo, (got, solo)
+        assert eng.stats.prefill_chunks == 1 + 2
+        print('OK')
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert "OK" in r.stdout, r.stdout + r.stderr
