@@ -2,19 +2,36 @@
 reference paths (what the models execute off-TPU) + interpret-mode parity
 checks for the Pallas TPU kernels. Wall-times on CPU are NOT TPU
 performance — the TPU-side cost model lives in the roofline analysis.
+
+The paged-decode microbench sweeps (block_size, max_blocks) across the
+``ref`` and ``pallas``-interpret backends of the fused append+attend
+decode step (``repro.kernels.ops.decode_attention``) and lands in the CI
+perf-trajectory artifact::
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --out BENCH_kernel_bench.json
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.grouped_matmul import grouped_matmul
 from repro.kernels.int4_dequant import int4_dequant
+
+try:
+    from ._bench_io import write_bench_json
+except ImportError:  # run as a plain script
+    import os
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _bench_io import write_bench_json
 
 
 def _time(fn, *args, iters=5):
@@ -26,7 +43,79 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(csv_rows):
+def _paged_case(B, C, Hq, Hkv, hd, block_size, max_blocks):
+    """Disjoint per-row tables over a pool sized for the sweep point."""
+    ks = jax.random.split(jax.random.PRNGKey(42), 5)
+    pool = B * max_blocks + 1  # + trash block 0
+    q = jax.random.normal(ks[0], (B, C, Hq, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (pool, block_size, Hkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (pool, block_size, Hkv, hd), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, C, Hkv, hd), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, C, Hkv, hd), jnp.float32)
+    tables = jnp.arange(1, B * max_blocks + 1, dtype=jnp.int32).reshape(
+        B, max_blocks
+    )
+    pos = jnp.asarray(
+        [(max_blocks * block_size) // 2 + i for i in range(B)], jnp.int32
+    )
+    return q, kp, vp, kn, vn, tables, pos
+
+
+def paged_decode_bench(csv_rows, sweep=((8, 8), (16, 8), (16, 16), (32, 8))):
+    """ref vs Pallas-interpret fused paged decode across the block sweep.
+
+    Returns the JSON payload fragment for the perf-trajectory artifact:
+    per sweep point, the per-call microseconds of both backends and the
+    max |ref - pallas| parity error (the gateable correctness signal —
+    CPU wall-times of an interpreted kernel are diagnostic only).
+    """
+    B, C, Hq, Hkv, hd = 4, 1, 8, 4, 64
+    points = {}
+    ok = True
+    for block_size, max_blocks in sweep:
+        args = _paged_case(B, C, Hq, Hkv, hd, block_size, max_blocks)
+        label = f"bs{block_size}x{max_blocks}"
+
+        def jitted(backend):
+            # operands stay jit ARGUMENTS (baking them in as closure
+            # constants would time constant-embedding, not the kernel)
+            def fn(q, kp, vp, kn, vn, tables, pos):
+                out, _, _ = ops.decode_attention(
+                    q,
+                    kp,
+                    vp,
+                    kn,
+                    vn,
+                    pos,
+                    block_tables=tables,
+                    scale=hd**-0.5,
+                    backend=backend,
+                )
+                return out
+
+            return jax.jit(fn)
+
+        ref_fn, pal_fn = jitted("ref"), jitted("pallas")
+        us_ref = _time(ref_fn, *args)
+        us_pal = _time(pal_fn, *args)
+        err = float(jnp.max(jnp.abs(ref_fn(*args) - pal_fn(*args))))
+        ok &= err < 2e-4
+        csv_rows.append(f"kernel_paged_decode_ref_jnp,{us_ref:.0f},{label}")
+        csv_rows.append(
+            f"kernel_paged_decode_pallas_interp,{us_pal:.0f},"
+            f"{label}_max_err={err:.2e}"
+        )
+        points[label] = {
+            "block_size": block_size,
+            "max_blocks": max_blocks,
+            "ref_us": us_ref,
+            "pallas_interp_us": us_pal,
+            "max_err": err,
+        }
+    return {"shape": f"B{B}C{C}H{Hq}/{Hkv}D{hd}", "points": points, "parity_ok": ok}
+
+
+def run(csv_rows, payload=None):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (1, 8, 512, 64), jnp.float32)
     k = jax.random.normal(ks[1], (1, 4, 512, 64), jnp.float32)
@@ -61,4 +150,30 @@ def run(csv_rows):
         )
     )
     csv_rows.append(f"kernel_dequant_pallas_interp,0,max_err={err:.2e}")
-    return True
+
+    paged = paged_decode_bench(csv_rows)
+    if payload is not None:
+        payload["paged_decode"] = paged
+    return paged["parity_ok"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out", default="BENCH_kernel_bench.json", help="JSON artifact path"
+    )
+    args = ap.parse_args()
+    rows = ["name,us_per_call,derived"]
+    payload = {"backend_default": ops.default_backend().value}
+    ok = run(rows, payload=payload)
+    payload["rows"] = rows
+    payload["parity_ok"] = ok
+    print("\n".join(rows))
+    write_bench_json(args.out, payload)
+    print(f"wrote {args.out}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

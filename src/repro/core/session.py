@@ -236,15 +236,19 @@ class HAPSession:
         return tc.mechanism, tc.c_ij * self.cfg.num_layers
 
     def engine(self, params, *, cfg: Optional[ModelConfig] = None,
-               max_batch: int = 8, eos_id: int = -1, **engine_kw):
+               max_batch: int = 8, eos_id: int = -1,
+               kernel_backend: Optional[str] = None, **engine_kw):
         """Build an adaptive ``InferenceEngine`` bound to this session.
 
         ``cfg`` overrides the *execution* config (e.g. the reduced dev-box
         variant) while planning stays at the session's full-scale config.
-        Extra keywords (``paged``, ``kv_block_size``, ``kv_blocks``,
-        ``prefill_chunk``, ...) pass through to ``InferenceEngine``.
+        ``kernel_backend`` pins the decode attention kernel backend
+        ("ref" | "pallas"; None resolves per platform — DESIGN.md
+        §Kernel backends). Extra keywords (``paged``, ``kv_block_size``,
+        ``kv_blocks``, ``prefill_chunk``, ...) pass through to
+        ``InferenceEngine``.
         """
         from repro.serving.engine import InferenceEngine
         return InferenceEngine(cfg or self.cfg, params, session=self,
                                max_batch=max_batch, eos_id=eos_id,
-                               **engine_kw)
+                               kernel_backend=kernel_backend, **engine_kw)

@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel layer public surface: the backend-dispatched ops plus the
+backend-selection helpers (see ``repro.kernels.ops`` and DESIGN.md
+§Kernel backends)."""
+
+from .ops import (  # noqa: F401
+    BACKEND_ENV,
+    KernelBackend,
+    attention,
+    decode_attention,
+    default_backend,
+    grouped_matmul,
+    int4_dequant,
+    resolve_backend,
+)

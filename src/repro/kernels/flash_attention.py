@@ -9,6 +9,7 @@ MXU-aligned tile sizes (bq, bk multiples of 128 on real hardware; tests use
 smaller interpret-mode tiles). Scratch: f32 accumulator (bq, hd) + running
 max/sum (bq,) — the standard FlashAttention-2 recurrence.
 """
+
 from __future__ import annotations
 
 import functools
@@ -22,11 +23,26 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0e38
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale: float, causal: bool, window: int, softcap: float,
-                  bq: int, bk: int, n_kv: int, q_offset: int):
-    i = pl.program_id(2)          # q block
-    j = pl.program_id(3)          # kv block (sequential, innermost)
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    bq: int,
+    bk: int,
+    n_kv: int,
+    q_offset: int,
+):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block (sequential, innermost)
 
     @pl.when(j == 0)
     def _init():
@@ -34,17 +50,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
-    k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
-    v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
 
     # queries align to the END of the kv sequence when Sq != Sk
-    qpos = q_offset + i * bq + jax.lax.broadcasted_iota(
-        jnp.int32, (bq, bk), 0)
+    qpos = q_offset + i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
     kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     ok = jnp.ones((bq, bk), bool)
     if causal:
@@ -59,7 +74,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     p = jnp.exp(s - m_cur[:, None])
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
+        p, v, preferred_element_type=jnp.float32
+    )
     m_ref[...] = m_cur
 
     @pl.when(j == n_kv - 1)
@@ -68,19 +84,29 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0, 0, ...] = (acc_ref[...] / lse[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "softcap", "scale", "bq", "bk", "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    softcap: float = 0.0, scale: Optional[float] = None,
-                    bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
     """q: (B, Hq, Sq, hd); k/v: (B, Hkv, Sk, hd) -> (B, Hq, Sq, hd)."""
     B, Hq, Sq, hd = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     G = Hq // Hkv
     if scale is None:
-        scale = hd ** -0.5
+        scale = hd**-0.5
     bq = min(bq, Sq)
     bk = min(bk, Sk)
     assert Sq % bq == 0 and Sk % bk == 0
@@ -88,8 +114,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     grid = (B, Hq, Sq // bq, n_kv)
 
     kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, window=window,
-        softcap=softcap, bq=bq, bk=bk, n_kv=n_kv, q_offset=Sk - Sq)
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        bq=bq,
+        bk=bk,
+        n_kv=n_kv,
+        q_offset=Sk - Sq,
+    )
 
     return pl.pallas_call(
         kernel,

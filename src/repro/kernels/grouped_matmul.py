@@ -10,6 +10,7 @@ innermost/sequential; f32 VMEM accumulator scratch; tiles MXU-aligned
 (128x128 on hardware). VMEM working set per step:
 bc*bk + bk*bf + bc*bf floats — e.g. 128^2 * 3 * 4B = 192 KiB.
 """
+
 from __future__ import annotations
 
 import functools
@@ -28,8 +29,10 @@ def _gmm_kernel(lhs_ref, rhs_ref, out_ref, acc_ref, *, n_k: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        lhs_ref[0].astype(jnp.float32), rhs_ref[0].astype(jnp.float32),
-        preferred_element_type=jnp.float32)
+        lhs_ref[0].astype(jnp.float32),
+        rhs_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
 
     @pl.when(kk == n_k - 1)
     def _done():
@@ -37,9 +40,15 @@ def _gmm_kernel(lhs_ref, rhs_ref, out_ref, acc_ref, *, n_k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bc", "bf", "bk", "interpret"))
-def grouped_matmul(lhs: jax.Array, rhs: jax.Array, *, bc: int = 128,
-                   bf: int = 128, bk: int = 512,
-                   interpret: bool = True) -> jax.Array:
+def grouped_matmul(
+    lhs: jax.Array,
+    rhs: jax.Array,
+    *,
+    bc: int = 128,
+    bf: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
     """(E, C, d) x (E, d, f) -> (E, C, f) with f32 accumulation."""
     E, C, d = lhs.shape
     f = rhs.shape[2]

@@ -15,6 +15,7 @@ tile in VMEM into a (bg, gs) bf16 tile. Unpacking is VPU bit-twiddling
 (shift/mask) + an interleaving reshape; lane dim stays 128-aligned for
 gs >= 256.
 """
+
 from __future__ import annotations
 
 import functools
@@ -35,9 +36,15 @@ def _dequant_kernel(packed_ref, scale_ref, zero_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "bg", "interpret"))
-def int4_dequant(packed: jax.Array, scales: jax.Array, zeros: jax.Array, *,
-                 out_dtype=jnp.bfloat16, bg: int = 256,
-                 interpret: bool = True) -> jax.Array:
+def int4_dequant(
+    packed: jax.Array,
+    scales: jax.Array,
+    zeros: jax.Array,
+    *,
+    out_dtype=jnp.bfloat16,
+    bg: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
     """packed (G, gs/2) uint8 + scales/zeros (G, 1) -> (G, gs) out_dtype."""
     G, half = packed.shape
     gs = 2 * half

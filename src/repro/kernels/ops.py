@@ -1,15 +1,34 @@
-"""Jitted dispatch wrappers over the Pallas kernels.
+"""Jitted dispatch over the Pallas kernels — the kernel-backend seam.
 
-On the CPU dev container the kernels run in interpret mode (kernel body
-executed in Python) purely for validation; ``use_pallas=False`` falls back
-to the pure-jnp reference implementations, which XLA fuses well and which
-the models use by default off-TPU. On real TPU hardware set
-``interpret=False`` (the default flips automatically when a TPU backend is
-detected).
+Every hot spot with a custom kernel is reached through one of these
+wrappers, selected by a ``KernelBackend``:
+
+- ``ref``    — the pure-jnp oracles in ``repro.kernels.ref`` (XLA fuses
+  them well; the correctness ground truth, and the sane default off-TPU),
+- ``pallas`` — the Pallas TPU kernels, compiled on real TPU hardware and
+  run in interpret mode (kernel body executed as traced jnp, purely for
+  validation) everywhere else.
+
+Selection precedence: an explicit ``backend=`` argument, then the
+``REPRO_KERNEL_BACKEND`` environment toggle (how the CI
+``kernels-interpret`` leg forces the Pallas paths through the whole
+suite), then ``default_backend()`` — per-platform: TPU compiles the
+kernels, GPU/CPU serve the references. See DESIGN.md §Kernel backends
+for the dispatch table and how to add a backend.
+
+``decode_attention`` is the decode hot path's single entry point: one
+cache-appending attention step for BOTH cache layouts — contiguous
+``(B, Smax, Hkv, hd)`` rows, or paged ``(num_blocks, block_size, Hkv,
+hd)`` pages walked through per-row block tables. A contiguous cache is
+dispatched to the paged Pallas kernel as a one-page-per-row pool behind
+an identity block table, so both layouts share one kernel.
 """
+
 from __future__ import annotations
 
-from typing import Optional
+import enum
+import os
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -18,38 +37,197 @@ from . import ref
 from .flash_attention import flash_attention as _flash_pallas
 from .grouped_matmul import grouped_matmul as _gmm_pallas
 from .int4_dequant import int4_dequant as _dequant_pallas
+from .paged_attention import paged_attention as _paged_pallas
 
 
-def _on_tpu() -> bool:
+class KernelBackend(str, enum.Enum):
+    """Which implementation a kernel dispatch executes."""
+
+    REF = "ref"
+    PALLAS = "pallas"
+
+
+BACKEND_ENV = "REPRO_KERNEL_BACKEND"
+
+# per-platform defaults: the Pallas kernels are TPU-targeted (interpret
+# mode is a validation device, not a performance path), so GPU and CPU
+# serve the jnp references, which XLA fuses natively on both
+_PLATFORM_DEFAULTS = {
+    "tpu": KernelBackend.PALLAS,
+    "gpu": KernelBackend.REF,
+    "cpu": KernelBackend.REF,
+}
+
+
+def default_backend() -> KernelBackend:
+    """The sane backend for the current ``jax.default_backend()``."""
     try:
-        return jax.default_backend() == "tpu"
+        platform = jax.default_backend()
     except Exception:
-        return False
+        platform = "cpu"
+    return _PLATFORM_DEFAULTS.get(platform, KernelBackend.REF)
 
 
-def attention(q, k, v, *, causal: bool = True, window: int = 0,
-              softcap: float = 0.0, scale: Optional[float] = None,
-              use_pallas: bool = False) -> jax.Array:
+def resolve_backend(backend: Union[KernelBackend, str, None] = None) -> KernelBackend:
+    """Normalize a backend spec: None/"auto" -> env toggle -> platform."""
+    if backend is None or backend == "auto":
+        backend = os.environ.get(BACKEND_ENV) or default_backend()
+    return KernelBackend(backend)
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret mode everywhere but on a real TPU backend."""
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:
+        return True
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    backend: Union[KernelBackend, str, None] = None,
+) -> jax.Array:
     """(B, Hq, Sq, hd) x (B, Hkv, Sk, hd)^2 -> (B, Hq, Sq, hd)."""
-    if use_pallas:
-        return _flash_pallas(q, k, v, causal=causal, window=window,
-                             softcap=softcap, scale=scale,
-                             interpret=not _on_tpu())
-    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
-                                   softcap=softcap, scale=scale)
+    if resolve_backend(backend) is KernelBackend.PALLAS:
+        return _flash_pallas(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            softcap=softcap,
+            scale=scale,
+            interpret=interpret_mode(),
+        )
+    return ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+    )
 
 
-def grouped_matmul(lhs, rhs, *, use_pallas: bool = False) -> jax.Array:
+def decode_attention(
+    q,
+    k_cache,
+    v_cache,
+    k_new,
+    v_new,
+    pos,
+    *,
+    block_tables=None,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    window: int = 0,
+    is_global=True,
+    trash_block: int = 0,
+    repeat_kv: int = 1,
+    constrain: Optional[Callable[[jax.Array], jax.Array]] = None,
+    sharded: Optional[bool] = None,
+    backend: Union[KernelBackend, str, None] = None,
+):
+    """One cache-appending decode/chunk attention step, either layout.
+
+    q: (B, C, Hq, hd) rope'd queries; k_new/v_new: (B, C, Hkv, hd) the
+    chunk's rope'd K/V; ``pos`` a scalar (lockstep) or (B,) vector of
+    write positions. ``block_tables`` None means a contiguous
+    ``(B, Smax, Hkv, hd)`` cache; otherwise the caches are shared
+    ``(num_blocks, block_size, Hkv, hd)`` pages addressed through the
+    ``(B, max_blocks)`` table. Returns ``(out, k_cache, v_cache)``.
+
+    The Pallas path covers the unsharded cases; ``sharded`` execution
+    (defaults to "a ``constrain`` callback was given"), like ``repeat_kv``
+    head replication (the non-dividing TP case), keeps the reference
+    math, which XLA partitions under the plan's constraints — same seam,
+    different implementation.
+    """
+    C = q.shape[1]
+    if block_tables is None and C > 1:
+        assert pos.ndim == 0, "contiguous multi-token append is lockstep-only"
+    if sharded is None:
+        sharded = constrain is not None
+    if (
+        resolve_backend(backend) is KernelBackend.PALLAS
+        and not sharded
+        and repeat_kv == 1
+    ):
+        B = q.shape[0]
+        posv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,))
+        tables = (
+            jnp.arange(B, dtype=jnp.int32)[:, None]  # one page per row
+            if block_tables is None
+            else block_tables
+        )
+        return _paged_pallas(
+            q,
+            k_cache,
+            v_cache,
+            tables,
+            k_new,
+            v_new,
+            posv,
+            is_global,
+            scale=scale,
+            softcap=softcap,
+            window=window,
+            interpret=interpret_mode(),
+        )
+    if block_tables is not None:
+        return ref.paged_attention_ref(
+            q,
+            k_cache,
+            v_cache,
+            block_tables,
+            k_new,
+            v_new,
+            pos,
+            is_global,
+            scale=scale,
+            softcap=softcap,
+            window=window,
+            trash_block=trash_block,
+            repeat_kv=repeat_kv,
+            constrain=constrain,
+        )
+    return ref.append_attention_ref(
+        q,
+        k_cache,
+        v_cache,
+        k_new,
+        v_new,
+        pos,
+        is_global,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        constrain=constrain,
+    )
+
+
+def grouped_matmul(
+    lhs, rhs, *, backend: Union[KernelBackend, str, None] = None
+) -> jax.Array:
     """(E, C, d) x (E, d, f) -> (E, C, f)."""
-    if use_pallas:
-        return _gmm_pallas(lhs, rhs, interpret=not _on_tpu())
+    if resolve_backend(backend) is KernelBackend.PALLAS:
+        return _gmm_pallas(lhs, rhs, interpret=interpret_mode())
     return ref.grouped_matmul_ref(lhs, rhs)
 
 
-def int4_dequant(packed, scales, zeros, *, out_dtype=jnp.bfloat16,
-                 use_pallas: bool = False) -> jax.Array:
+def int4_dequant(
+    packed,
+    scales,
+    zeros,
+    *,
+    out_dtype=jnp.bfloat16,
+    backend: Union[KernelBackend, str, None] = None,
+) -> jax.Array:
     """(G, gs/2) uint8 -> (G, gs) out_dtype."""
-    if use_pallas:
-        return _dequant_pallas(packed, scales, zeros, out_dtype=out_dtype,
-                               interpret=not _on_tpu())
+    if resolve_backend(backend) is KernelBackend.PALLAS:
+        return _dequant_pallas(
+            packed, scales, zeros, out_dtype=out_dtype, interpret=interpret_mode()
+        )
     return ref.int4_dequant_ref(packed, scales, zeros, out_dtype=out_dtype)

@@ -1,0 +1,216 @@
+"""Pallas TPU paged-attention decode kernel (the decode hot spot).
+
+One fused cache-appending attention step over a block-pooled KV cache
+(DESIGN.md §4b): the chunk's new K/V are scattered into their physical
+pages *and* the row's logical KV view is attended with an on-chip online
+softmax, in a single kernel — the pure-jnp path materializes every row's
+gathered ``(B, max_blocks * block_size, Hkv, hd)`` view in HBM per step,
+which this kernel never does.
+
+TPU mapping: grid ``(B, Hkv, max_blocks)`` with the page axis innermost
+and sequential (FlashAttention-2 carry in VMEM scratch). The per-row
+block-table walk rides the BlockSpec index maps: ``block_tables`` and
+``pos`` are scalar-prefetch operands (SMEM), so each grid step DMAs
+exactly the physical page ``block_tables[b, j]`` into VMEM — pages are
+fetched by id, never gathered. The chunk append is fused with the
+scatter: each page slot builds a one-hot selector against the chunk's
+token indices (an MXU matmul, no in-kernel gather) and the page is
+written back through an aliased output, so stale slots copy through
+unchanged and written slots carry the new K/V into the same step's
+attention.
+
+Semantics match ``repro.kernels.ref.paged_attention_ref`` exactly:
+
+- write positions are ``pos[b] .. pos[b] + C - 1`` per row; slots whose
+  logical position falls outside that range keep their page content
+  (out-of-range appends simply never land — no trash-block routing is
+  needed on the kernel side),
+- validity comes from causality alone: a row's stale/unwritten logical
+  positions always sit *above* its query position, and all-masked pages
+  self-correct under the online softmax (the finite ``NEG_INF`` mask
+  value makes the rescale factor an exact zero once a valid page
+  arrives),
+- drained rows (all-trash tables) read whatever the trash page holds —
+  finite garbage, discarded by the engine, exactly like the jnp path.
+
+GQA: q heads are grouped over kv heads (head ``h`` serves q heads
+``h*G .. (h+1)*G - 1``); the non-dividing TP head-replication case is
+routed to the reference path by ``repro.kernels.ops``. On real hardware
+``block_size`` should be a multiple of the dtype sublane tile and
+``head_dim`` a multiple of 128; interpret-mode tests use smaller tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38  # finite f32 mask value (see module docstring)
+
+
+def _paged_kernel(
+    tables_ref,
+    pos_ref,
+    flags_ref,
+    q_ref,
+    k_page_ref,
+    v_page_ref,
+    k_new_ref,
+    v_new_ref,
+    o_ref,
+    k_out_ref,
+    v_out_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    softcap: float,
+    window: int,
+    bs: int,
+    C: int,
+    G: int,
+    n_blocks: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)  # page walk: innermost, sequential
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    p0 = pos_ref[b]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+
+    # fused chunk append: slot-side one-hot select of the chunk token that
+    # lands here (if any) — an MXU matmul instead of an in-kernel gather
+    idx = kpos - p0  # chunk-token index per page slot
+    wmask = (idx >= 0) & (idx < C)
+    sel = idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (bs, C), 1)
+    sel = (sel & wmask[:, None]).astype(jnp.float32)  # (bs, C)
+
+    k_page = k_page_ref[0, :, 0, :].astype(jnp.float32)  # (bs, hd)
+    v_page = v_page_ref[0, :, 0, :].astype(jnp.float32)
+    k_new = k_new_ref[0, :, 0, :].astype(jnp.float32)  # (C, hd)
+    v_new = v_new_ref[0, :, 0, :].astype(jnp.float32)
+    k_page = jnp.where(wmask[:, None], jnp.dot(sel, k_new), k_page)
+    v_page = jnp.where(wmask[:, None], jnp.dot(sel, v_new), v_page)
+    # unconditional write-back: the aliased out buffer holds a *different*
+    # page from the previous grid step, so copying through is load-bearing
+    k_out_ref[0, :, 0, :] = k_page.astype(k_out_ref.dtype)
+    v_out_ref[0, :, 0, :] = v_page.astype(v_out_ref.dtype)
+
+    q = q_ref[0, :, :, :].astype(jnp.float32).reshape(C * G, -1)
+    s = jnp.dot(q, k_page.T, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = p0 + jax.lax.broadcasted_iota(jnp.int32, (C, G), 0).reshape(C * G)
+    ok = kpos[None, :] <= qpos[:, None]  # causal — also kills stale slots
+    if window > 0:
+        win = ok & ((qpos[:, None] - kpos[None, :]) < window)
+        ok = jnp.where(flags_ref[0] != 0, ok, win)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v_page, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        lse = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, :, :] = (acc_ref[...] / lse[:, None]).reshape(C, G, -1).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "window", "interpret"))
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    is_global=True,
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    window: int = 0,
+    interpret: bool = True,
+):
+    """Fused paged append + decode attention.
+
+    q: (B, C, Hq, hd) rope'd queries; k_pages/v_pages: (N, bs, Hkv, hd)
+    shared physical pages; block_tables: (B, max_blocks) int32;
+    k_new/v_new: (B, C, Hkv, hd) rope'd chunk K/V; pos: (B,) int32 write
+    positions; ``is_global`` may be traced (per-layer sliding-window
+    flag). Returns ``(out (B, C, Hq, hd), k_pages, v_pages)`` with the
+    pages updated in place (aliased).
+    """
+    B, C, Hq, hd = q.shape
+    bs, Hkv = k_pages.shape[1], k_pages.shape[2]
+    G = Hq // Hkv
+    assert Hq % Hkv == 0, "GQA requires q heads to divide over kv heads"
+    assert pos.shape == (B,), "pos must be a (B,) vector (broadcast scalars)"
+    n_blocks = block_tables.shape[1]
+    if scale is None:
+        scale = hd**-0.5
+    flags = jnp.asarray(is_global, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _paged_kernel,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        bs=bs,
+        C=C,
+        G=G,
+        n_blocks=n_blocks,
+    )
+    page_spec = pl.BlockSpec(
+        (1, bs, 1, hd), lambda b, h, j, tables, pos, flags: (tables[b, j], 0, h, 0)
+    )
+    row_spec = pl.BlockSpec(
+        (1, C, 1, hd), lambda b, h, j, tables, pos, flags: (b, 0, h, 0)
+    )
+    head_spec = pl.BlockSpec(
+        (1, C, G, hd), lambda b, h, j, tables, pos, flags: (b, 0, h, 0)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, n_blocks),
+        in_specs=[head_spec, page_spec, page_spec, row_spec, row_spec],
+        out_specs=[head_spec, page_spec, page_spec],
+        scratch_shapes=[
+            pltpu.VMEM((C * G, hd), jnp.float32),
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, Hq, hd), q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        # operand indices count the scalar-prefetch args: pages -> page outs
+        input_output_aliases={4: 1, 5: 2},
+        interpret=interpret,
+    )(block_tables, pos, flags, q, k_pages, v_pages, k_new, v_new)

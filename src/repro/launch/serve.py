@@ -16,6 +16,10 @@ static TP/EP baselines, or a pinned plan via --plan
 loop (decode-time joins, DESIGN.md §4b) instead of lockstep static
 batches: re-planning then hooks at admission time on the live workload
 bucket, and join/retire events are logged per request.
+
+``--kernel-backend`` pins the decode attention kernel ("ref" jnp math or
+the "pallas" paged-attention kernel; "auto" picks per platform) —
+DESIGN.md §Kernel backends.
 """
 from __future__ import annotations
 
@@ -61,6 +65,10 @@ def main() -> None:
                          "(0 = one chunk per prompt bucket)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="continuous: paged KV block size in tokens")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="decode attention kernel backend (auto resolves "
+                         "per platform: Pallas on TPU, jnp ref elsewhere)")
     args = ap.parse_args()
     logging.basicConfig(
         level=logging.INFO, format="%(name)s: %(message)s")
@@ -98,7 +106,9 @@ def main() -> None:
     params = init_params(cfg, jax.random.PRNGKey(0))
     engine = session.engine(params, cfg=cfg, max_batch=args.batch,
                             kv_block_size=args.kv_block_size,
-                            prefill_chunk=args.prefill_chunk or None)
+                            prefill_chunk=args.prefill_chunk or None,
+                            kernel_backend=None if args.kernel_backend == "auto"
+                            else args.kernel_backend)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         long_req = (not args.uniform) and i >= args.requests // 2

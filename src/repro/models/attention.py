@@ -6,6 +6,12 @@ long sequences — the prefill path scans over query chunks with an online
 softmax over KV chunks (pure-jnp flash; the Pallas kernel in
 ``repro.kernels.flash_attention`` is the TPU-target version of the same
 algorithm and is validated against ``repro.kernels.ref``).
+
+The decode hot path is a *dispatch*: ``decode_attention`` projects
+q/k/v, then hands the cache-appending attention step — contiguous or
+paged layout — to ``repro.kernels.ops.decode_attention``, where a
+``KernelBackend`` selects the pure-jnp reference or the Pallas
+paged-attention kernel (DESIGN.md §Kernel backends).
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from .common import apply_rope, softcap
 
 NEG_INF = -2.0e38  # f32-safe mask value
@@ -160,19 +167,26 @@ def full_attention(q, k, v, cfg: ModelConfig, is_global,
               .reshape(B, Sq, Hq, hd).astype(q.dtype)
 
 
-def _maybe_repeat_kv(k, v, cfg: ModelConfig, plan):
-    """When q heads shard over TP but kv heads don't divide the axis,
-    replicate kv heads up to the q head count (G=1) so the GQA grouping
-    reshape never splits a sharded head dim (vLLM-style kv replication)."""
+def _repeat_kv_factor(cfg: ModelConfig, plan) -> int:
+    """KV replication factor when q heads shard over TP but kv heads
+    don't divide the axis (vLLM-style): repeat kv up to the q head count
+    (G=1) so the GQA grouping reshape never splits a sharded head dim.
+    The single source of truth for prefill (``_maybe_repeat_kv``) and
+    decode (the ``repeat_kv`` dispatch argument) alike."""
     if plan is None or plan.is_null or plan.attn_mode != "tp_heads":
-        return k, v, False
+        return 1
     tp = plan.axis_size(plan.attn_tp_axis)
     if cfg.num_kv_heads % tp == 0 or cfg.num_heads % tp != 0:
+        return 1
+    return cfg.num_heads // cfg.num_kv_heads
+
+
+def _maybe_repeat_kv(k, v, cfg: ModelConfig, plan):
+    """Apply ``_repeat_kv_factor`` to a (B, S, Hkv, hd) pair."""
+    g = _repeat_kv_factor(cfg, plan)
+    if g == 1:
         return k, v, False
-    g = cfg.num_heads // cfg.num_kv_heads
-    k = jnp.repeat(k, g, axis=2)
-    v = jnp.repeat(v, g, axis=2)
-    return k, v, True
+    return jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2), True
 
 
 def attention_block(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
@@ -227,7 +241,8 @@ def prefill_kv(x: jax.Array, w: AttnTemps, cfg: ModelConfig):
 def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
                      is_global, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, plan,
-                     block_tables: Optional[jax.Array] = None) -> tuple:
+                     block_tables: Optional[jax.Array] = None,
+                     backend=None) -> tuple:
     """Cache-appending attention: one decode token or one prefill chunk.
 
     x: (B, C, d) — C == 1 is plain decode; C > 1 is a chunked-prefill
@@ -243,80 +258,35 @@ def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
     Caches are contiguous ``(B, Smax, Hkv, hd)`` when ``block_tables`` is
     None, else paged ``(num_blocks, block_size, Hkv, hd)`` pages shared
     by all rows, with ``block_tables`` (B, max_blocks) mapping each row's
-    logical positions to physical blocks. The paged path scatters the new
-    K/V through the table and gathers each row's logical view back for
-    attention; rows whose table entries point at the trash block (id 0 —
-    drained slots, unallocated tail entries) scatter dead writes there
-    and have every stale gathered position killed by the causal mask
-    (stale offsets always sit *above* the row's query position, exact
-    zeros after the online softmax).
+    logical positions to physical blocks (trash-block semantics and the
+    causality-only validity argument live with the kernels —
+    ``repro.kernels.ref.paged_attention_ref`` /
+    ``repro.kernels.paged_attention``).
 
-    Returns (out (B,C,d), new_k_cache, new_v_cache). Attention runs over
-    the full cache with a validity mask, which under a sequence-sharded
-    cache lowers to partial softmax + all-reduce (flash-decoding analog).
+    This function is projection + dispatch: the scatter/gather/attend
+    step itself runs in ``repro.kernels.ops.decode_attention`` under the
+    selected ``backend`` ("ref" | "pallas" | None for auto). Returns
+    (out (B,C,d), new_k_cache, new_v_cache).
     """
     B, C = x.shape[0], x.shape[1]
     q_pos = ((pos[:, None] if pos.ndim else pos[None, None])
              + jnp.arange(C, dtype=jnp.int32))          # (B|1, C)
     q, k_new, v_new = qkv_project(x, w, cfg, q_pos)
 
-    if block_tables is not None:
-        bs = k_cache.shape[1]
-        max_blocks = block_tables.shape[1]
-        tpos = jnp.broadcast_to(q_pos, (B, C))          # write positions
-        blk = tpos // bs
-        off = tpos % bs
-        phys = jnp.take_along_axis(
-            block_tables, jnp.clip(blk, 0, max_blocks - 1), axis=1)
-        # positions past the table width go to the trash block, never to
-        # the last real block (that would corrupt a live token's slot)
-        phys = jnp.where(blk < max_blocks, phys, TRASH_BLOCK)      # (B, C)
-        k_cache = k_cache.at[phys, off].set(k_new.astype(k_cache.dtype))
-        v_cache = v_cache.at[phys, off].set(v_new.astype(v_cache.dtype))
-        if plan is not None and not plan.is_null \
-                and plan.kv_shard == "heads":
-            k_cache = plan.constrain(k_cache, plan.cache_spec_bshd())
-            v_cache = plan.constrain(v_cache, plan.cache_spec_bshd())
-        # gather each row's logical view: (B, max_blocks*bs, Hkv, hd)
-        k = k_cache[block_tables].reshape(
-            (B, max_blocks * bs) + k_cache.shape[2:])
-        v = v_cache[block_tables].reshape(
-            (B, max_blocks * bs) + v_cache.shape[2:])
-        k, v, _ = _maybe_repeat_kv(k, v, cfg, plan)
-        Smax = max_blocks * bs
-        # validity comes from causality alone: a row's stale/unwritten
-        # positions are always > its query position (see docstring)
-        kv_len = None
-    else:
-        if C > 1:
-            assert pos.ndim == 0, \
-                "multi-token append on a contiguous cache is lockstep-only"
-        if pos.ndim:
-            # per-row scatter: row i writes its token's K/V at pos[i].
-            # Rows whose pos is out of range (drained slots) write nowhere.
-            write = (jnp.arange(k_cache.shape[1], dtype=jnp.int32)[None, :]
-                     == pos[:, None])                  # (B, Smax)
-            k_cache = jnp.where(write[:, :, None, None],
-                                k_new.astype(k_cache.dtype), k_cache)
-            v_cache = jnp.where(write[:, :, None, None],
-                                v_new.astype(v_cache.dtype), v_cache)
-        else:
-            k_cache = jax.lax.dynamic_update_slice(
-                k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
-        if plan is not None and not plan.is_null:
-            k_cache = plan.constrain(k_cache, plan.cache_spec_bshd())
-            v_cache = plan.constrain(v_cache, plan.cache_spec_bshd())
-        k, v = k_cache, v_cache
-        Smax = k_cache.shape[1]
-        kv_len = pos + C
+    constrain = None
+    if plan is not None and not plan.is_null:
+        if block_tables is None or plan.kv_shard == "heads":
+            def constrain(c, _plan=plan):
+                return _plan.constrain(c, _plan.cache_spec_bshd())
+    repeat = _repeat_kv_factor(cfg, plan) if block_tables is not None else 1
 
-    k_positions = jnp.arange(Smax, dtype=jnp.int32)
-    q_positions = q_pos if pos.ndim else q_pos[0]
-    out = full_attention(q, k.astype(q.dtype), v.astype(q.dtype),
-                         cfg, is_global, q_positions, k_positions,
-                         kv_len=kv_len, kv_chunk=max(Smax, 1))
+    out, k_cache, v_cache = kernel_ops.decode_attention(
+        q, k_cache, v_cache, k_new, v_new, pos,
+        block_tables=block_tables, scale=_scale(cfg),
+        softcap=cfg.attn_logit_softcap, window=cfg.sliding_window,
+        is_global=is_global, trash_block=TRASH_BLOCK, repeat_kv=repeat,
+        constrain=constrain,
+        sharded=plan is not None and not plan.is_null, backend=backend)
     o = jnp.einsum("bse,ed->bsd", out.reshape(B, C, -1).astype(x.dtype),
                    w.wo, preferred_element_type=x.dtype)
     return o, k_cache, v_cache

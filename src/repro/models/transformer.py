@@ -455,7 +455,7 @@ def merge_cache_rows(cache: DecodeCache, sub: DecodeCache,
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array,
-                cache: DecodeCache, plan=None
+                cache: DecodeCache, plan=None, backend=None
                 ) -> Tuple[jax.Array, DecodeCache]:
     """One cache-appending step: a decode token or a prefill chunk.
 
@@ -468,6 +468,10 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
     batching); either way the returned cache has ``pos + C`` — callers
     that freeze drained rows (the continuous engine) re-pin ``pos``
     before the next step.
+
+    ``backend`` selects the attention kernel backend ("ref" | "pallas" |
+    None for auto) — threaded into every layer's ``decode_attention``
+    dispatch (DESIGN.md §Kernel backends).
     """
     assert cfg.causal
     C = token.shape[1]
@@ -487,7 +491,7 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
         xs["conv"] = cache.conv
         xs["ssm"] = cache.ssm
 
-    body = make_decode_body(cfg, plan, pos, cache.block_tables)
+    body = make_decode_body(cfg, plan, pos, cache.block_tables, backend)
     h, ys = _scan(body, x, xs)
     new_cache = cache._replace(pos=pos + C)
     if cfg.has_attention:
@@ -498,11 +502,13 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
     return logits[:, 0], new_cache
 
 
-def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None):
+def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None,
+                     backend=None):
     """The decode layer-scan body (exposed for the dry-run cost probe).
 
     ``block_tables`` (shared by every layer — one logical layout per
-    request) switches the attention path to the paged gather/scatter.
+    request) switches the attention path to the paged layout;
+    ``backend`` picks the kernel implementation behind the dispatch.
     """
 
     def body(h, per_layer):
@@ -514,7 +520,7 @@ def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None):
             w = attn_mod.AttnTemps(**lp["attn"])
             a_out, k_c, v_c = attn_mod.decode_attention(
                 hn, w, cfg, flag, per_layer["k"], per_layer["v"], pos, plan,
-                block_tables=block_tables)
+                block_tables=block_tables, backend=backend)
             ys["k"], ys["v"] = k_c, v_c
             outs.append(("attn", a_out))
         if cfg.has_mamba:

@@ -43,6 +43,14 @@ prompt in ``prefill_chunk``-token pieces, each fused with a live decode
 step, so admission never stalls decode for more than one chunk.
 Mamba/hybrid families (no chunked state append yet) fall back to the
 contiguous fixed-slot path.
+
+The decode hot path dispatches through the kernel-backend seam
+(``repro.kernels.ops.decode_attention``): the ``kernel_backend`` knob
+("ref" | "pallas" | None for auto, also reachable via
+``HAPSession.engine`` and ``serve.py --kernel-backend``) is threaded
+into every jitted decode/chunk/fused entry, so the same engine serves
+the pure-jnp reference math or the Pallas paged-attention kernel
+without recompiling anything else (DESIGN.md §Kernel backends).
 """
 
 from __future__ import annotations
@@ -181,6 +189,7 @@ class InferenceEngine:
         kv_block_size: int = 16,
         kv_blocks: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
+        kernel_backend: Optional[str] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -205,6 +214,9 @@ class InferenceEngine:
         self.kv_block_size = kv_block_size
         self.kv_blocks = kv_blocks  # pool size override (blocks, sans trash)
         self.prefill_chunk = prefill_chunk  # None => one chunk per bucket
+        # decode attention kernel backend ("ref" | "pallas"); None/"auto"
+        # resolves per platform at dispatch (repro.kernels.ops)
+        self.kernel_backend = kernel_backend
         self.stats = EngineStats()
         # False until a batch has executed under hap_plan: a pre-seeded
         # plan (engine_from_hap) must count as the *initial* plan, not as
@@ -237,31 +249,36 @@ class InferenceEngine:
         )
 
     def _decode_fn(self, plan):
-        cfg = self.cfg
+        cfg, be = self.cfg, self.kernel_backend
         return self._jit(
             ("decode", plan),
-            lambda: jax.jit(lambda p, t, c: decode_step(p, cfg, t, c, plan=plan)),
+            lambda: jax.jit(
+                lambda p, t, c: decode_step(p, cfg, t, c, plan=plan, backend=be)
+            ),
         )
 
     def _chunk_fn(self, plan):
         """Append one B=1 prefill chunk through a row's block table."""
-        cfg = self.cfg
+        cfg, be = self.cfg, self.kernel_backend
         return self._jit(
             ("chunk", plan),
             lambda: jax.jit(
-                lambda p, t, row, c: _chunk_append(p, cfg, t, row, c, plan)
+                lambda p, t, row, c: _chunk_append(p, cfg, t, row, c, plan, be)
             ),
         )
 
     def _fused_fn(self, plan):
         """One fused continuous step: a prefill chunk for the joining row
         followed by a decode step over the full slot set, in a single jit
-        call (one entry per plan; shapes retrace internally)."""
-        cfg = self.cfg
+        call (one entry per plan; shapes retrace internally). Both halves
+        hit the same kernel entry point (``ops.decode_attention``) under
+        the engine's backend — the chunk append as a paged C>1 step, the
+        decode as a C=1 step."""
+        cfg, be = self.cfg, self.kernel_backend
 
         def fused(p, chunk_tok, row, dec_tok, cache):
-            _, cache = _chunk_append(p, cfg, chunk_tok, row, cache, plan)
-            return decode_step(p, cfg, dec_tok, cache, plan=plan)
+            _, cache = _chunk_append(p, cfg, chunk_tok, row, cache, plan, be)
+            return decode_step(p, cfg, dec_tok, cache, plan=plan, backend=be)
 
         return self._jit(("fused", plan), lambda: jax.jit(fused))
 
@@ -893,7 +910,7 @@ class InferenceEngine:
         return comps
 
 
-def _chunk_append(params, cfg: ModelConfig, chunk_tok, row, cache, plan):
+def _chunk_append(params, cfg: ModelConfig, chunk_tok, row, cache, plan, backend=None):
     """Append a B=1 prompt chunk to paged-cache row ``row`` (traced).
 
     Slices the row's block-table/pos view out of the live cache, runs the
@@ -903,7 +920,7 @@ def _chunk_append(params, cfg: ModelConfig, chunk_tok, row, cache, plan):
         block_tables=jax.lax.dynamic_slice_in_dim(cache.block_tables, row, 1, axis=0),
         pos=jax.lax.dynamic_slice_in_dim(cache.pos, row, 1, axis=0),
     )
-    logits, sub = decode_step(params, cfg, chunk_tok, sub, plan=plan)
+    logits, sub = decode_step(params, cfg, chunk_tok, sub, plan=plan, backend=backend)
     cache = cache._replace(
         k=sub.k,
         v=sub.v,

@@ -1,0 +1,102 @@
+"""Tolerance edges of the CI bench-gate (benchmarks/check_regression.py):
+the exactly-at-tolerance boundary, missing baseline keys, the wide
+absolute-tok/s band, boolean gates, and --update's value-only rewrite.
+"""
+import importlib.util
+import os
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                 "check_regression.py"))
+check_regression = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_regression)
+
+
+def _baseline(**metrics):
+    return {"metrics": metrics}
+
+
+def _rows_by_path(rows):
+    return {r[0]: r for r in rows}
+
+
+def test_exactly_at_default_tolerance_passes():
+    """fresh == value * (1 - 0.15) sits ON the floor: >= means ok."""
+    base = _baseline(**{"a.speedup": {"value": 1.0}})
+    rows, ok = check_regression.check({"a": {"speedup": 0.85}}, base)
+    assert ok and rows[0][3] == "ok"
+    # one ulp under the floor fails
+    rows, ok = check_regression.check({"a": {"speedup": 0.85 - 1e-9}}, base)
+    assert not ok and rows[0][3].startswith("FAIL")
+
+
+def test_explicit_tolerance_boundary():
+    base = _baseline(**{"m.x": {"value": 2.0, "max_regression": 0.5}})
+    assert check_regression.check({"m": {"x": 1.0}}, base)[1]
+    assert not check_regression.check({"m": {"x": 0.999}}, base)[1]
+
+
+def test_missing_baseline_key_fails_loudly():
+    base = _baseline(**{"gone.metric": {"value": 1.0},
+                        "there.metric": {"value": 1.0}})
+    rows, ok = check_regression.check({"there": {"metric": 2.0}}, base)
+    assert not ok
+    by = _rows_by_path(rows)
+    assert by["gone.metric"][2] == "MISSING"
+    assert by["gone.metric"][3] == "FAIL"
+    assert by["there.metric"][3] == "ok"  # improvement always passes
+
+
+def test_wide_tok_per_s_band_absorbs_machine_variance():
+    """Absolute tok/s carry a wide tolerance in the committed baseline:
+    a 3x slower CI machine must not trip the gate, the ratio does."""
+    base = _baseline(**{
+        "h2h.continuous_tok_s": {"value": 300.0, "max_regression": 0.9},
+        "h2h.speedup": {"value": 1.25, "max_regression": 0.15},
+    })
+    fresh = {"h2h": {"continuous_tok_s": 100.0, "speedup": 1.24}}
+    rows, ok = check_regression.check(fresh, base)
+    assert ok, rows
+    fresh["h2h"]["speedup"] = 1.0  # ratio regression DOES fail
+    assert not check_regression.check(fresh, base)[1]
+
+
+def test_boolean_gate_requires_exact_match():
+    base = _baseline(**{"h2h.solo_exact": {"value": True}})
+    assert check_regression.check({"h2h": {"solo_exact": True}}, base)[1]
+    assert not check_regression.check({"h2h": {"solo_exact": False}}, base)[1]
+
+
+def test_nested_resolution_and_non_dict_path():
+    payload = {"a": {"b": {"c": 3.0}}, "scalar": 1.0}
+    assert check_regression.resolve(payload, "a.b.c") == 3.0
+    assert check_regression.resolve(payload, "a.b.missing") is None
+    assert check_regression.resolve(payload, "scalar.deeper") is None
+
+
+def test_update_rewrites_values_keeps_tolerances():
+    base = _baseline(**{
+        "m.x": {"value": 1.0, "max_regression": 0.5},
+        "m.gone": {"value": 9.0, "max_regression": 0.2},
+    })
+    out = check_regression.update_baseline({"m": {"x": 2.5}}, base)
+    assert out["metrics"]["m.x"] == {"value": 2.5, "max_regression": 0.5}
+    # absent metrics keep their committed value (no silent deletion)
+    assert out["metrics"]["m.gone"]["value"] == 9.0
+
+
+def test_main_exit_code(tmp_path, monkeypatch, capsys):
+    fresh = tmp_path / "fresh.json"
+    baseline = tmp_path / "baseline.json"
+    fresh.write_text('{"m": {"x": 0.5}}')
+    baseline.write_text('{"metrics": {"m.x": {"value": 1.0}}}')
+    monkeypatch.setattr(sys, "argv", [
+        "check_regression.py", str(fresh), "--baseline", str(baseline)])
+    with pytest.raises(SystemExit) as e:
+        check_regression.main()
+    assert e.value.code == 1
+    assert "REGRESSION" in capsys.readouterr().out

@@ -103,11 +103,26 @@ def test_int4_dequant(G, gs, bg, out_dtype):
                                np.asarray(expect, np.float32), atol=1e-2)
 
 
-def test_ops_dispatch_fallback_equals_pallas():
+def test_ops_dispatch_ref_equals_pallas():
     ks = jax.random.split(jax.random.PRNGKey(4), 3)
     q = jax.random.normal(ks[0], (1, 2, 32, 16), jnp.float32)
     k = jax.random.normal(ks[1], (1, 2, 32, 16), jnp.float32)
     v = jax.random.normal(ks[2], (1, 2, 32, 16), jnp.float32)
-    a = ops.attention(q, k, v, use_pallas=False)
-    b = ops.attention(q, k, v, use_pallas=True)
+    a = ops.attention(q, k, v, backend="ref")
+    b = ops.attention(q, k, v, backend=ops.KernelBackend.PALLAS)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_backend_resolution(monkeypatch):
+    """None/"auto" -> env toggle -> per-platform default; bad specs raise."""
+    monkeypatch.delenv(ops.BACKEND_ENV, raising=False)
+    assert ops.default_backend() == ops.KernelBackend.REF  # CPU test host
+    assert ops.resolve_backend(None) == ops.default_backend()
+    assert ops.resolve_backend("auto") == ops.default_backend()
+    assert ops.resolve_backend("pallas") == ops.KernelBackend.PALLAS
+    assert ops.resolve_backend(ops.KernelBackend.REF) == ops.KernelBackend.REF
+    monkeypatch.setenv(ops.BACKEND_ENV, "pallas")
+    assert ops.resolve_backend(None) == ops.KernelBackend.PALLAS
+    assert ops.resolve_backend("ref") == ops.KernelBackend.REF  # explicit wins
+    with pytest.raises(ValueError):
+        ops.resolve_backend("cuda")

@@ -279,7 +279,11 @@ def test_paged_continuous_on_sharded_mesh():
     """Paged serve_continuous under a real heads-sharded TP mesh must
     stay token-exact vs solo runs ON THE SAME MESH (null-mesh outputs
     differ in psum reduction order, so the solo reference shares the
-    mesh). Subprocess: forced host devices, like the bridge tests."""
+    mesh). Both kernel backends are exercised: "ref" runs the jnp math
+    under the plan's constraints; "pallas" keeps the same seam (sharded
+    plans route to the reference path inside ``ops.decode_attention``)
+    and must produce identical tokens. Subprocess: forced host devices,
+    like the bridge tests."""
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=2",
@@ -310,14 +314,15 @@ def test_paged_continuous_on_sharded_mesh():
             eng = session().engine(params, max_batch=1)
             eng.submit(Request(prompt=p, max_new_tokens=g))
             solo[uid] = eng.run()[0].tokens
-        eng = session().engine(params, max_batch=2, prefill_chunk=16,
-                               kv_block_size=8)
-        for p, g in reqs:
-            eng.submit(Request(prompt=p, max_new_tokens=g))
-        got = {c.uid: c.tokens for c in eng.serve_continuous()}
-        assert eng._sharding_for('decode').kv_shard == 'heads'
-        assert got == solo, (got, solo)
-        assert eng.stats.prefill_chunks == 1 + 2
+        for backend in ('ref', 'pallas'):
+            eng = session().engine(params, max_batch=2, prefill_chunk=16,
+                                   kv_block_size=8, kernel_backend=backend)
+            for p, g in reqs:
+                eng.submit(Request(prompt=p, max_new_tokens=g))
+            got = {c.uid: c.tokens for c in eng.serve_continuous()}
+            assert eng._sharding_for('decode').kv_shard == 'heads'
+            assert got == solo, (backend, got, solo)
+            assert eng.stats.prefill_chunks == 1 + 2
         print('OK')
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
