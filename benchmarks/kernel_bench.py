@@ -3,10 +3,19 @@ reference paths (what the models execute off-TPU) + interpret-mode parity
 checks for the Pallas TPU kernels. Wall-times on CPU are NOT TPU
 performance — the TPU-side cost model lives in the roofline analysis.
 
-The paged-decode microbench sweeps (block_size, max_blocks) across the
-``ref`` and ``pallas``-interpret backends of the fused append+attend
-decode step (``repro.kernels.ops.decode_attention``) and lands in the CI
-perf-trajectory artifact::
+Three sweeps land in the CI perf-trajectory artifact, each a gateable
+ref-vs-pallas parity signal (CPU wall-times of an interpreted kernel are
+diagnostic only):
+
+- ``paged_decode``   — (block_size, max_blocks) over the fused
+  append+attend step (``ops.decode_attention``),
+- ``sharded_decode`` — the same step shard_map'ed over a mesh spanning
+  every host device (the sharded-plan hot path; 1 device still executes
+  the shard_map code path),
+- ``grouped_matmul`` — the expert-FFN seam (``ops.grouped_matmul``)
+  across fp32 / bf16 / INT4-dequant weights.
+
+::
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --out BENCH_kernel_bench.json
 """
@@ -19,11 +28,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
 
+from repro.core.quantization import quantize_int4
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.grouped_matmul import grouped_matmul
 from repro.kernels.int4_dequant import int4_dequant
+from repro.sharding.specs import KernelShardAxes
 
 try:
     from ._bench_io import write_bench_json
@@ -115,6 +128,114 @@ def paged_decode_bench(csv_rows, sweep=((8, 8), (16, 8), (16, 16), (32, 8))):
     return {"shape": f"B{B}C{C}H{Hq}/{Hkv}D{hd}", "points": points, "parity_ok": ok}
 
 
+def sharded_decode_bench(csv_rows, sweep=((2, 8, 8), (4, 8, 8), (4, 16, 8))):
+    """ref vs shard_map'ed Pallas decode on a mesh over every host device.
+
+    Sweeps (kv_heads, block_size, max_blocks); q heads are 2x kv. The
+    pallas backend runs the paged kernel per head shard under shard_map
+    (``KernelShardAxes``), the ref backend the global scatter/gather —
+    the parity error is the gateable signal that sharded plans and the
+    single-shard oracle agree.
+    """
+    devs = jax.devices()
+    mesh = Mesh(np.array(devs).reshape(len(devs)), ("model",))
+    axes = KernelShardAxes(mesh, "model")
+    B, C, hd = 4, 1, 64
+    points = {}
+    ok = True
+    for hkv, block_size, max_blocks in sweep:
+        hkv, hq = hkv * len(devs), 2 * hkv * len(devs)
+        args = _paged_case(B, C, hq, hkv, hd, block_size, max_blocks)
+        label = f"h{hq}/{hkv}bs{block_size}x{max_blocks}x{len(devs)}dev"
+
+        def jitted(backend, shard_axes=None):
+            def fn(q, kp, vp, kn, vn, tables, pos):
+                out, _, _ = ops.decode_attention(
+                    q,
+                    kp,
+                    vp,
+                    kn,
+                    vn,
+                    pos,
+                    block_tables=tables,
+                    scale=hd**-0.5,
+                    shard_axes=shard_axes,
+                    backend=backend,
+                )
+                return out
+
+            return jax.jit(fn)
+
+        ref_fn = jitted("ref")
+        pal_fn = jitted("pallas", shard_axes=axes)
+        us_ref = _time(ref_fn, *args)
+        us_pal = _time(pal_fn, *args)
+        err = float(jnp.max(jnp.abs(ref_fn(*args) - pal_fn(*args))))
+        ok &= err < 2e-4
+        csv_rows.append(f"kernel_sharded_decode_ref_jnp,{us_ref:.0f},{label}")
+        csv_rows.append(
+            f"kernel_sharded_decode_pallas_shard_map,{us_pal:.0f},"
+            f"{label}_max_err={err:.2e}"
+        )
+        points[label] = {
+            "kv_heads": hkv,
+            "block_size": block_size,
+            "max_blocks": max_blocks,
+            "ref_us": us_ref,
+            "pallas_shard_map_us": us_pal,
+            "max_err": err,
+        }
+    return {"devices": len(devs), "points": points, "parity_ok": ok}
+
+
+def grouped_matmul_bench(csv_rows):
+    """ref vs Pallas-interpret for the expert-FFN grouped-matmul seam
+    across weight dtypes, including the INT4-dequant-aware path."""
+    E, C, d, f = 8, 128, 256, 128
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    points = {}
+    ok = True
+    dense32 = jax.random.normal(k2, (E, d, f), jnp.float32)
+    qt = quantize_int4(np.asarray(dense32), "per_group", group_size=128)
+    cases = {
+        "fp32": (jnp.float32, dense32),
+        "bf16": (jnp.bfloat16, dense32.astype(jnp.bfloat16)),
+        "int4": (
+            jnp.float32,
+            ops.QuantizedWeight(
+                packed=jnp.asarray(qt.packed),
+                scales=jnp.asarray(qt.scales),
+                zeros=jnp.asarray(qt.zeros),
+                shape=(E, d, f),
+            ),
+        ),
+    }
+    for label, (lhs_dtype, rhs) in cases.items():
+        lhs = jax.random.normal(k1, (E, C, d), lhs_dtype)
+
+        def jitted(backend):
+            return jax.jit(lambda ll: ops.grouped_matmul(ll, rhs, backend=backend))
+
+        ref_fn, pal_fn = jitted("ref"), jitted("pallas")
+        us_ref = _time(ref_fn, lhs)
+        us_pal = _time(pal_fn, lhs)
+        err = float(
+            jnp.max(
+                jnp.abs(
+                    ref_fn(lhs).astype(jnp.float32) - pal_fn(lhs).astype(jnp.float32)
+                )
+            )
+        )
+        tol = 2e-1 if lhs_dtype == jnp.bfloat16 else 2e-3
+        ok &= err < tol
+        csv_rows.append(f"kernel_gmm_seam_ref_{label},{us_ref:.0f},E{E}C{C}")
+        csv_rows.append(
+            f"kernel_gmm_seam_pallas_{label},{us_pal:.0f},max_err={err:.2e}"
+        )
+        points[label] = {"ref_us": us_ref, "pallas_interp_us": us_pal, "max_err": err}
+    return {"shape": f"E{E}C{C}K{d}F{f}", "points": points, "parity_ok": ok}
+
+
 def run(csv_rows, payload=None):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (1, 8, 512, 64), jnp.float32)
@@ -152,9 +273,13 @@ def run(csv_rows, payload=None):
     csv_rows.append(f"kernel_dequant_pallas_interp,0,max_err={err:.2e}")
 
     paged = paged_decode_bench(csv_rows)
+    sharded = sharded_decode_bench(csv_rows)
+    gmm = grouped_matmul_bench(csv_rows)
     if payload is not None:
         payload["paged_decode"] = paged
-    return paged["parity_ok"]
+        payload["sharded_decode"] = sharded
+        payload["grouped_matmul"] = gmm
+    return paged["parity_ok"] and sharded["parity_ok"] and gmm["parity_ok"]
 
 
 def main() -> None:

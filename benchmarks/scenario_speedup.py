@@ -110,6 +110,7 @@ def serve_head_to_head(
     gen_long: int = 48,
     seed: int = 0,
     passes: int = 3,
+    kernel_backend: str = "auto",
 ) -> dict:
     """Static vs continuous batching on a mixed short/long-output trace.
 
@@ -123,6 +124,11 @@ def serve_head_to_head(
     CI/dev boxes. The capacity factor is raised so MoE token dropping
     cannot couple batch rows, making greedy outputs token-exact
     comparable against per-request solo runs.
+
+    ``kernel_backend`` pins the serving kernel seam ("ref" | "pallas" |
+    "auto"; DESIGN.md §4c) for every engine in the head-to-head — the
+    bench-gate trajectory runs both, so a backend regression (perf or
+    greedy divergence) shows in the ``BENCH_*`` artifacts.
     """
     cfg = dataclasses.replace(
         get_config("deepseek-moe-16b").reduced(), dtype="float32", capacity_factor=8.0
@@ -146,7 +152,13 @@ def serve_head_to_head(
         )
         # half-bucket chunks: every continuous join exercises the paged
         # chunked-prefill path (two fused chunks per 16-token prompt)
-        return session.engine(params, max_batch=batch, prefill_chunk=8, kv_block_size=8)
+        return session.engine(
+            params,
+            max_batch=batch,
+            prefill_chunk=8,
+            kv_block_size=8,
+            kernel_backend=None if kernel_backend == "auto" else kernel_backend,
+        )
 
     def one_pass(eng, runner):
         for p, g in trace:
@@ -189,6 +201,7 @@ def serve_head_to_head(
     cont = [c.tokens for c in sorted(comps_c, key=lambda c: c.uid)]
     return {
         "n_requests": n_requests,
+        "kernel_backend": kernel_backend,
         "max_batch": max_batch,
         "gen_short": gen_short,
         "gen_long": gen_long,
@@ -259,12 +272,25 @@ def main() -> None:
     ap.add_argument(
         "--out", default="BENCH_scenario_speedup.json", help="JSON artifact path"
     )
+    ap.add_argument(
+        "--kernel-backend",
+        default="auto",
+        choices=["auto", "ref", "pallas"],
+        help="serving kernel seam for every engine in the head-to-head "
+        "(auto resolves per platform; the CI bench trajectory runs both)",
+    )
     args = ap.parse_args()
 
     if args.smoke:
-        h2h = serve_head_to_head()
+        h2h = serve_head_to_head(kernel_backend=args.kernel_backend)
     else:
-        h2h = serve_head_to_head(n_requests=12, max_batch=4, gen_short=4, gen_long=64)
+        h2h = serve_head_to_head(
+            n_requests=12,
+            max_batch=4,
+            gen_short=4,
+            gen_long=64,
+            kernel_backend=args.kernel_backend,
+        )
     print(
         f"static batching:     {h2h['static_tok_per_s']:.1f} tok/s "
         f"({h2h['static_batches']} lockstep batches)"

@@ -242,7 +242,9 @@ class HAPSession:
 
         ``cfg`` overrides the *execution* config (e.g. the reduced dev-box
         variant) while planning stays at the session's full-scale config.
-        ``kernel_backend`` pins the decode attention kernel backend
+        ``kernel_backend`` pins the serving kernel backend — prefill
+        flash, decode attention and the grouped expert matmuls all
+        dispatch through it, shard_map'ed per shard under sharded plans
         ("ref" | "pallas"; None resolves per platform — DESIGN.md
         §Kernel backends). Extra keywords (``paged``, ``kv_block_size``,
         ``kv_blocks``, ``prefill_chunk``, ...) pass through to

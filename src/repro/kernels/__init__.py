@@ -4,11 +4,15 @@ backend-selection helpers (see ``repro.kernels.ops`` and DESIGN.md
 
 from .ops import (  # noqa: F401
     BACKEND_ENV,
+    DISPATCH_COUNTS,
     KernelBackend,
+    QuantizedWeight,
     attention,
     decode_attention,
     default_backend,
+    flash_attention,
     grouped_matmul,
     int4_dequant,
+    reset_dispatch_counts,
     resolve_backend,
 )

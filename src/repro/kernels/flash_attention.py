@@ -23,6 +23,20 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0e38
 
 
+def tile_size(n: int, pref: int) -> int:
+    """Largest divisor of ``n`` that is <= ``pref``.
+
+    Tile shapes must divide the operand (the BlockSpec grids here carry
+    no masking); preferring 128 keeps real-TPU tiles MXU-aligned while
+    odd interpret-mode shapes (prompt buckets, capacity slabs, per-shard
+    head counts) degrade to a smaller exact tile instead of asserting.
+    """
+    t = max(1, min(pref, n))
+    while n % t:
+        t -= 1
+    return t
+
+
 def _flash_kernel(
     q_ref,
     k_ref,
@@ -107,9 +121,8 @@ def flash_attention(
     G = Hq // Hkv
     if scale is None:
         scale = hd**-0.5
-    bq = min(bq, Sq)
-    bk = min(bk, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0
+    bq = tile_size(Sq, bq)
+    bk = tile_size(Sk, bk)
     n_kv = Sk // bk
     grid = (B, Hq, Sq // bq, n_kv)
 

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .flash_attention import tile_size
+
 
 def _gmm_kernel(lhs_ref, rhs_ref, out_ref, acc_ref, *, n_k: int):
     kk = pl.program_id(3)
@@ -53,10 +55,11 @@ def grouped_matmul(
     E, C, d = lhs.shape
     f = rhs.shape[2]
     assert rhs.shape[:2] == (E, d)
-    bc = min(bc, C)
-    bf = min(bf, f)
-    bk = min(bk, d)
-    assert C % bc == 0 and f % bf == 0 and d % bk == 0
+    # exact-divisor tiles: per-plan shapes (capacity slabs, d_ff shards)
+    # degrade to smaller tiles instead of asserting (see tile_size)
+    bc = tile_size(C, bc)
+    bf = tile_size(f, bf)
+    bk = tile_size(d, bk)
     n_k = d // bk
     grid = (E, C // bc, f // bf, n_k)
 

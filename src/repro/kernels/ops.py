@@ -16,22 +16,45 @@ suite), then ``default_backend()`` — per-platform: TPU compiles the
 kernels, GPU/CPU serve the references. See DESIGN.md §Kernel backends
 for the dispatch table and how to add a backend.
 
+**Sharded plans** execute the Pallas kernels too: a ``KernelShardAxes``
+(``repro.sharding.specs`` — the plan resolves which mesh axis the
+kernel-sharded dim lives on) makes the dispatch wrap the kernel in a
+``shard_map`` with that axis on the sharded dimension and everything
+else replicated, so each device runs the fused kernel on its own head /
+d_ff shard. Attention over heads needs no collective; the row-parallel
+grouped matmul psums its partial products. Plans whose dimensions don't
+divide the axis (``repeat_kv`` head replication, seq-sharded caches)
+keep the jnp reference math under the same seam.
+
 ``decode_attention`` is the decode hot path's single entry point: one
 cache-appending attention step for BOTH cache layouts — contiguous
 ``(B, Smax, Hkv, hd)`` rows, or paged ``(num_blocks, block_size, Hkv,
 hd)`` pages walked through per-row block tables. A contiguous cache is
 dispatched to the paged Pallas kernel as a one-page-per-row pool behind
 an identity block table, so both layouts share one kernel.
+
+``DISPATCH_COUNTS`` tallies which branch each trace took (keys like
+``decode.pallas_shard_map``); counts tick at trace time, so tests can
+assert a given plan actually routed to the kernel, not the fallback.
 """
 
 from __future__ import annotations
 
+import collections
+import dataclasses
 import enum
 import os
-from typing import Callable, Optional, Union
+from typing import Callable, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import (
+    SHARD_MAP_KW as _SHARD_MAP_KW,
+    KernelShardAxes,
+    shard_map as _shard_map,
+)
 
 from . import ref
 from .flash_attention import flash_attention as _flash_pallas
@@ -57,6 +80,19 @@ _PLATFORM_DEFAULTS = {
     "gpu": KernelBackend.REF,
     "cpu": KernelBackend.REF,
 }
+
+# trace-time dispatch probe: which branch each op selected. jit caches
+# mean a count of N says "traced N times", not "ran N steps" — enough
+# for tests to assert a sharded plan actually hit the Pallas path.
+DISPATCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def _record(branch: str) -> None:
+    DISPATCH_COUNTS[branch] += 1
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
 
 
 def default_backend() -> KernelBackend:
@@ -111,6 +147,97 @@ def attention(
     )
 
 
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    is_global=True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    shard_axes: Optional[KernelShardAxes] = None,
+    backend: Union[KernelBackend, str, None] = None,
+) -> jax.Array:
+    """Causal full-sequence (prefill) attention in MODEL layout.
+
+    q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd) -> (B, S, Hq, hd). Unlike
+    ``attention`` this takes the per-layer traced ``is_global`` flag
+    (sliding-window models scan it with the layer stack): ``window > 0``
+    applies only when the flag is False, selected by ``lax.cond`` so the
+    Pallas kernel keeps its static window argument.
+
+    ``shard_axes`` (a heads-sharded plan's ``attn_kernel_axes``) wraps
+    the kernel in a shard_map with q/k/v heads on the plan's TP axis —
+    attention is head-parallel, so no collective is needed. The ``ref``
+    path serves ``ref.decode_attend_ref`` on the global arrays (XLA
+    partitions it under the plan's constraints).
+    """
+    B, S, Hq, hd = q.shape
+    be = resolve_backend(backend)
+    if be is not KernelBackend.PALLAS:
+        _record("flash.ref")
+        pos = jnp.arange(S, dtype=jnp.int32)
+        return ref.decode_attend_ref(
+            q,
+            k,
+            v,
+            pos,
+            pos,
+            scale=hd**-0.5 if scale is None else scale,
+            softcap=softcap,
+            window=window,
+            is_global=is_global,
+        )
+
+    def one_call(lq, lk, lv, win: int) -> jax.Array:
+        qt, kt, vt = (t.transpose(0, 2, 1, 3) for t in (lq, lk, lv))
+        out = _flash_pallas(
+            qt,
+            kt,
+            vt,
+            causal=True,
+            window=win,
+            softcap=softcap,
+            scale=scale,
+            interpret=interpret_mode(),
+        )
+        return out.transpose(0, 2, 1, 3)
+
+    def local_call(lq, lk, lv, flag) -> jax.Array:
+        if window <= 0:
+            return one_call(lq, lk, lv, 0)
+        return jax.lax.cond(
+            jnp.asarray(flag, bool),
+            lambda: one_call(lq, lk, lv, 0),
+            lambda: one_call(lq, lk, lv, window),
+        )
+
+    if shard_axes is None:
+        _record("flash.pallas")
+        return local_call(q, k, v, is_global)
+    _record("flash.pallas_shard_map")
+    heads = P(None, None, shard_axes.axis, None)
+    fn = _shard_map(
+        local_call,
+        mesh=shard_axes.mesh,
+        in_specs=(heads, heads, heads, P()),
+        out_specs=heads,
+        **_SHARD_MAP_KW,
+    )
+    return fn(q, k, v, jnp.asarray(is_global))
+
+
+def _normalize_pos(pos) -> jax.Array:
+    """Coerce ``pos`` to int32 once at the seam: callers mix python ints,
+    scalar arrays and (B,) vectors (the Pallas path used to broadcast
+    late, dtype included)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim > 1:
+        raise ValueError(f"pos must be a scalar or (B,) vector, got {pos.shape}")
+    return pos
+
+
 def decode_attention(
     q,
     k_cache,
@@ -128,55 +255,103 @@ def decode_attention(
     repeat_kv: int = 1,
     constrain: Optional[Callable[[jax.Array], jax.Array]] = None,
     sharded: Optional[bool] = None,
+    shard_axes: Optional[KernelShardAxes] = None,
     backend: Union[KernelBackend, str, None] = None,
 ):
     """One cache-appending decode/chunk attention step, either layout.
 
     q: (B, C, Hq, hd) rope'd queries; k_new/v_new: (B, C, Hkv, hd) the
     chunk's rope'd K/V; ``pos`` a scalar (lockstep) or (B,) vector of
-    write positions. ``block_tables`` None means a contiguous
-    ``(B, Smax, Hkv, hd)`` cache; otherwise the caches are shared
-    ``(num_blocks, block_size, Hkv, hd)`` pages addressed through the
-    ``(B, max_blocks)`` table. Returns ``(out, k_cache, v_cache)``.
+    write positions — any int dtype, normalized to int32 here.
+    ``block_tables`` None means a contiguous ``(B, Smax, Hkv, hd)``
+    cache; otherwise the caches are shared ``(num_blocks, block_size,
+    Hkv, hd)`` pages addressed through the ``(B, max_blocks)`` table.
+    Returns ``(out, k_cache, v_cache)``.
 
-    The Pallas path covers the unsharded cases; ``sharded`` execution
-    (defaults to "a ``constrain`` callback was given"), like ``repeat_kv``
-    head replication (the non-dividing TP case), keeps the reference
-    math, which XLA partitions under the plan's constraints — same seam,
-    different implementation.
+    Dispatch: the Pallas kernel serves the unsharded cases directly and
+    — when ``shard_axes`` resolves (a heads-sharded plan whose q AND kv
+    head counts divide the TP axis, ``ShardingPlan.decode_kernel_axes``)
+    — sharded plans through a shard_map that walks each device's head
+    shard of the page pool. ``repeat_kv`` head replication (the
+    non-dividing TP case) and sharded plans without kernel axes keep the
+    reference math, which XLA partitions under ``constrain`` — same
+    seam, different implementation.
     """
+    pos = _normalize_pos(pos)
     C = q.shape[1]
-    if block_tables is None and C > 1:
-        assert pos.ndim == 0, "contiguous multi-token append is lockstep-only"
+    if block_tables is None and C > 1 and pos.ndim != 0:
+        raise ValueError(
+            f"contiguous multi-token append is lockstep-only: a C={C} chunk "
+            f"needs a scalar pos, got shape {pos.shape}. Per-row chunked "
+            "appends (continuous batching) require a paged cache — pass "
+            "block_tables, or decode one token at a time."
+        )
     if sharded is None:
-        sharded = constrain is not None
+        sharded = constrain is not None or shard_axes is not None
     if (
         resolve_backend(backend) is KernelBackend.PALLAS
-        and not sharded
         and repeat_kv == 1
+        and (not sharded or shard_axes is not None)
     ):
         B = q.shape[0]
-        posv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos, jnp.int32)), (B,))
+        posv = jnp.broadcast_to(jnp.atleast_1d(pos), (B,))
         tables = (
             jnp.arange(B, dtype=jnp.int32)[:, None]  # one page per row
             if block_tables is None
             else block_tables
         )
-        return _paged_pallas(
-            q,
-            k_cache,
-            v_cache,
-            tables,
-            k_new,
-            v_new,
-            posv,
-            is_global,
-            scale=scale,
-            softcap=softcap,
-            window=window,
-            interpret=interpret_mode(),
+        if shard_axes is None:
+            _record("decode.pallas")
+            return _paged_pallas(
+                q,
+                k_cache,
+                v_cache,
+                tables,
+                k_new,
+                v_new,
+                posv,
+                is_global,
+                scale=scale,
+                softcap=softcap,
+                window=window,
+                interpret=interpret_mode(),
+            )
+        _record("decode.pallas_shard_map")
+        heads = P(None, None, shard_axes.axis, None)
+
+        def local_step(lq, lk, lv, lt, lkn, lvn, lp, lflag):
+            return _paged_pallas(
+                lq,
+                lk,
+                lv,
+                lt,
+                lkn,
+                lvn,
+                lp,
+                lflag,
+                scale=scale,
+                softcap=softcap,
+                window=window,
+                interpret=interpret_mode(),
+            )
+
+        # pages/caches and projections shard over heads; tables, write
+        # positions and the layer flag are replicated. Batch and page
+        # dims stay replicated inside the map — attention is fully
+        # head-parallel, so no collective is needed and out_specs just
+        # reassemble the head shards.
+        fn = _shard_map(
+            local_step,
+            mesh=shard_axes.mesh,
+            in_specs=(heads, heads, heads, P(None, None), heads, heads, P(None), P()),
+            out_specs=(heads, heads, heads),
+            **_SHARD_MAP_KW,
+        )
+        return fn(
+            q, k_cache, v_cache, tables, k_new, v_new, posv, jnp.asarray(is_global)
         )
     if block_tables is not None:
+        _record("decode.ref_paged")
         return ref.paged_attention_ref(
             q,
             k_cache,
@@ -193,6 +368,7 @@ def decode_attention(
             repeat_kv=repeat_kv,
             constrain=constrain,
         )
+    _record("decode.ref_append")
     return ref.append_attention_ref(
         q,
         k_cache,
@@ -208,13 +384,111 @@ def decode_attention(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class QuantizedWeight:
+    """A per-group INT4 weight for the dequant-aware grouped matmul.
+
+    The packing is ``repro.core.quantization``'s: two nibbles per uint8,
+    low nibble first, per-group f32 scale/zero — the exact layout the
+    Pallas ``int4_dequant`` kernel consumes. ``shape`` is the unpacked
+    (E, d, f) the matmul sees — registered as static pytree aux data so
+    the weight can cross jit boundaries as an argument (the arrays trace,
+    the shape stays concrete for ``reshape``).
+    """
+
+    packed: jax.Array  # (G, gs // 2) uint8
+    scales: jax.Array  # (G, 1) float32
+    zeros: jax.Array  # (G, 1) float32
+    shape: Tuple[int, ...]  # unpacked rhs shape, e.g. (E, d, f)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedWeight,
+    lambda qw: ((qw.packed, qw.scales, qw.zeros), tuple(qw.shape)),
+    lambda shape, leaves: QuantizedWeight(*leaves, shape=shape),
+)
+
+
+def _dequant_weight(rhs, be: KernelBackend, out_dtype) -> jax.Array:
+    """Materialize a ``QuantizedWeight`` (dense arrays pass through)."""
+    if not isinstance(rhs, QuantizedWeight):
+        return rhs
+    if be is KernelBackend.PALLAS:
+        w = _dequant_pallas(
+            rhs.packed,
+            rhs.scales,
+            rhs.zeros,
+            out_dtype=out_dtype,
+            interpret=interpret_mode(),
+        )
+    else:
+        w = ref.int4_dequant_ref(rhs.packed, rhs.scales, rhs.zeros, out_dtype=out_dtype)
+    return w.reshape(rhs.shape)
+
+
 def grouped_matmul(
-    lhs, rhs, *, backend: Union[KernelBackend, str, None] = None
+    lhs,
+    rhs,
+    *,
+    shard_axes: Optional[KernelShardAxes] = None,
+    sharded_dim: str = "out",
+    backend: Union[KernelBackend, str, None] = None,
 ) -> jax.Array:
-    """(E, C, d) x (E, d, f) -> (E, C, f)."""
-    if resolve_backend(backend) is KernelBackend.PALLAS:
-        return _gmm_pallas(lhs, rhs, interpret=interpret_mode())
-    return ref.grouped_matmul_ref(lhs, rhs)
+    """(E, C, d) x (E, d, f) -> (E, C, f) — the expert-FFN seam.
+
+    ``rhs`` may be a dense array or a ``QuantizedWeight`` (INT4 per-group
+    packed), dequantized through the backend's dequant path before the
+    matmul — the Table-I transition round-trip serves straight from the
+    packed nibbles.
+
+    ``shard_axes`` (a TP plan's ``expert_kernel_axes``) runs the Pallas
+    kernel per d_ff shard under shard_map, Megatron-style:
+
+    - ``sharded_dim="out"`` — column-parallel: rhs' LAST dim is on the
+      axis, the output stays sharded there, no collective (wi_gate/wi_up),
+    - ``sharded_dim="in"``  — row-parallel: the CONTRACTION dim is on the
+      axis; each shard's partial product is psummed (wo).
+
+    The ``ref`` backend ignores ``shard_axes`` and serves the global
+    einsum, which XLA partitions under the plan's constraints — exactly
+    the pre-seam math.
+    """
+    be = resolve_backend(backend)
+    out_dtype = lhs.dtype
+    if be is not KernelBackend.PALLAS:
+        _record("gmm.ref")
+        return ref.grouped_matmul_ref(lhs, _dequant_weight(rhs, be, out_dtype))
+    w = _dequant_weight(rhs, be, out_dtype)
+    if shard_axes is None:
+        _record("gmm.pallas")
+        return _gmm_pallas(lhs, w, interpret=interpret_mode())
+    _record("gmm.pallas_shard_map")
+    ax = shard_axes.axis
+    if sharded_dim == "out":
+        in_specs = (P(None, None, None), P(None, None, ax))
+        out_specs = P(None, None, ax)
+
+        def local(loc_l, loc_r):
+            return _gmm_pallas(loc_l, loc_r, interpret=interpret_mode())
+
+    elif sharded_dim == "in":
+        in_specs = (P(None, None, ax), P(None, ax, None))
+        out_specs = P(None, None, None)
+
+        def local(loc_l, loc_r):
+            part = _gmm_pallas(loc_l, loc_r, interpret=interpret_mode())
+            return jax.lax.psum(part, ax)
+
+    else:
+        raise ValueError(f"sharded_dim must be 'out'|'in', got {sharded_dim!r}")
+    fn = _shard_map(
+        local,
+        mesh=shard_axes.mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        **_SHARD_MAP_KW,
+    )
+    return fn(lhs, w)
 
 
 def int4_dequant(

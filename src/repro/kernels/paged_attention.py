@@ -35,9 +35,13 @@ Semantics match ``repro.kernels.ref.paged_attention_ref`` exactly:
 
 GQA: q heads are grouped over kv heads (head ``h`` serves q heads
 ``h*G .. (h+1)*G - 1``); the non-dividing TP head-replication case is
-routed to the reference path by ``repro.kernels.ops``. On real hardware
-``block_size`` should be a multiple of the dtype sublane tile and
-``head_dim`` a multiple of 128; interpret-mode tests use smaller tiles.
+routed to the reference path by ``repro.kernels.ops``. Heads-sharded
+plans call this kernel *per KV shard* inside a ``shard_map`` (the grid's
+``Hkv`` axis then counts local heads; G is preserved because q and kv
+heads divide the TP axis together — ``ops.decode_attention``). On real
+hardware ``block_size`` should be a multiple of the dtype sublane tile
+and ``head_dim`` a multiple of 128; interpret-mode tests use smaller
+tiles.
 """
 
 from __future__ import annotations

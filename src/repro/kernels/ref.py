@@ -6,6 +6,13 @@ references double as the ``ref`` kernel backend the models execute
 off-TPU (``repro.kernels.ops``): their math is the single-chunk online
 softmax the model layer used inline before the kernel seam existed, so
 greedy outputs are unchanged by the dispatch refactor.
+``decode_attend_ref`` additionally serves the prefill-flash seam's
+``ref`` path (``ops.flash_attention`` over arange positions — it is the
+only oracle that takes the traced per-layer ``is_global`` flag), and
+``grouped_matmul_ref``/``int4_dequant_ref`` the expert-FFN seam,
+including the INT4 ``QuantizedWeight`` dequant-then-matmul path. Under
+sharded plans these references are what XLA partitions when a plan
+cannot map onto the shard_map'ed kernels (DESIGN.md §4c).
 """
 
 from __future__ import annotations

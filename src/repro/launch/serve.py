@@ -17,8 +17,9 @@ loop (decode-time joins, DESIGN.md §4b) instead of lockstep static
 batches: re-planning then hooks at admission time on the live workload
 bucket, and join/retire events are logged per request.
 
-``--kernel-backend`` pins the decode attention kernel ("ref" jnp math or
-the "pallas" paged-attention kernel; "auto" picks per platform) —
+``--kernel-backend`` pins the serving kernels ("ref" jnp math, or
+"pallas" for the flash/paged-attention/grouped-matmul kernels — run per
+shard via shard_map under sharded plans; "auto" picks per platform) —
 DESIGN.md §Kernel backends.
 """
 from __future__ import annotations
@@ -67,8 +68,10 @@ def main() -> None:
                     help="continuous: paged KV block size in tokens")
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "ref", "pallas"],
-                    help="decode attention kernel backend (auto resolves "
-                         "per platform: Pallas on TPU, jnp ref elsewhere)")
+                    help="serving kernel backend: prefill flash, decode "
+                         "attention and grouped expert matmuls (auto "
+                         "resolves per platform: Pallas on TPU, jnp ref "
+                         "elsewhere)")
     args = ap.parse_args()
     logging.basicConfig(
         level=logging.INFO, format="%(name)s: %(message)s")

@@ -191,17 +191,28 @@ def _maybe_repeat_kv(k, v, cfg: ModelConfig, plan):
 
 def attention_block(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
                     is_global, plan, q_chunk: int = 512,
-                    return_kv: bool = False):
+                    return_kv: bool = False, backend=None):
     """Full-sequence attention (training / prefill): (B,S,d) -> (B,S,d).
 
     ``return_kv=True`` also returns the (pre-replication, rope'd) K/V so
     prefill can seed the decode cache without re-projecting them.
+
+    ``backend`` selects the kernel path for the attention proper
+    (DESIGN.md §4c): ``pallas`` routes causal prefill through
+    ``ops.flash_attention`` — shard_map'ed over the plan's TP axis when
+    the (post-replication) head counts divide it — while ``ref``/None
+    keeps the chunked jnp flash below, whose numerics the greedy
+    equivalence tests pin. Replicated-attention and non-dividing plans
+    always keep the jnp path.
     """
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)
     q, k, v = qkv_project(x, w, cfg, positions[None, :])
     kv_out = (k, v) if return_kv else None
     k, v, repeated = _maybe_repeat_kv(k, v, cfg, plan)
+    use_kernel = (kernel_ops.resolve_backend(backend)
+                  is kernel_ops.KernelBackend.PALLAS and cfg.causal)
+    shard_axes = None
     if plan is not None and not plan.is_null:
         heads_sharded = plan.attn_mode == "tp_heads"
         q = plan.constrain(q, plan.act_bthd(heads_sharded))
@@ -209,8 +220,17 @@ def attention_block(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
             plan.attn_tp_axis) == 0)
         k = plan.constrain(k, plan.act_bthd(kv_ok))
         v = plan.constrain(v, plan.act_bthd(kv_ok))
+        # the kernel runs per head shard: only a heads-on-TP plan whose
+        # (post-replication) head counts divide the axis maps onto it
+        shard_axes = plan.attn_kernel_axes(cfg.num_heads, k.shape[2])
+        use_kernel = use_kernel and shard_axes is not None
 
-    if S > q_chunk and S % q_chunk == 0:
+    if use_kernel:
+        out = kernel_ops.flash_attention(
+            q, k, v, is_global=is_global, window=cfg.sliding_window,
+            softcap=cfg.attn_logit_softcap, scale=_scale(cfg),
+            shard_axes=shard_axes, backend=kernel_ops.KernelBackend.PALLAS)
+    elif S > q_chunk and S % q_chunk == 0:
         nq = S // q_chunk
         qs = q.reshape(B, nq, q_chunk, cfg.num_heads, cfg.head_dim)
 
@@ -269,15 +289,21 @@ def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
     (out (B,C,d), new_k_cache, new_v_cache).
     """
     B, C = x.shape[0], x.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)  # callers mix python ints and arrays
     q_pos = ((pos[:, None] if pos.ndim else pos[None, None])
              + jnp.arange(C, dtype=jnp.int32))          # (B|1, C)
     q, k_new, v_new = qkv_project(x, w, cfg, q_pos)
 
     constrain = None
+    shard_axes = None
     if plan is not None and not plan.is_null:
         if block_tables is None or plan.kv_shard == "heads":
             def constrain(c, _plan=plan):
                 return _plan.constrain(c, _plan.cache_spec_bshd())
+        # heads-sharded plans with dividing head counts run the Pallas
+        # kernel per KV shard under shard_map; others (repeat_kv, seq-
+        # sharded caches) keep ref under the same seam (DESIGN.md §4c)
+        shard_axes = plan.decode_kernel_axes(cfg.num_heads, cfg.num_kv_heads)
     repeat = _repeat_kv_factor(cfg, plan) if block_tables is not None else 1
 
     out, k_cache, v_cache = kernel_ops.decode_attention(
@@ -285,7 +311,7 @@ def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
         block_tables=block_tables, scale=_scale(cfg),
         softcap=cfg.attn_logit_softcap, window=cfg.sliding_window,
         is_global=is_global, trash_block=TRASH_BLOCK, repeat_kv=repeat,
-        constrain=constrain,
+        constrain=constrain, shard_axes=shard_axes,
         sharded=plan is not None and not plan.is_null, backend=backend)
     o = jnp.einsum("bse,ed->bsd", out.reshape(B, C, -1).astype(x.dtype),
                    w.wo, preferred_element_type=x.dtype)

@@ -28,16 +28,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.sharding.specs import SHARD_MAP_KW as _SHARD_MAP_KW
+from repro.sharding.specs import shard_map as _shard_map
 from .common import activation_fn, glu_ffn
-
-# jax.shard_map (with check_vma) only exists in newer jax; older versions
-# ship it under jax.experimental with the check_rep spelling.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _SHARD_MAP_KW = {"check_vma": False}
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SHARD_MAP_KW = {"check_rep": False}
 
 
 class MoEOut(NamedTuple):
@@ -105,17 +99,35 @@ def combine(y_buf, flat_expert, pos_in_expert, keep, flat_gates, T: int):
 
 
 def expert_ffn(buf: jax.Array, wi_gate: jax.Array, wi_up: jax.Array,
-               wo: jax.Array, act_name: str) -> jax.Array:
-    """(E, C, d) x (E, d, f)^2 x (E, f, d) -> (E, C, d)."""
+               wo: jax.Array, act_name: str, *, plan=None,
+               backend=None) -> jax.Array:
+    """(E, C, d) x (E, d, f)^2 x (E, f, d) -> (E, C, d).
+
+    Every per-expert GEMM dispatches through the grouped-matmul seam
+    (``repro.kernels.ops.grouped_matmul``, DESIGN.md §4c): the ``ref``
+    backend is the einsum XLA partitions under the plan's constraints;
+    ``pallas`` runs the grouped kernel — per d_ff shard under shard_map
+    when a TP ``plan`` resolves ``expert_kernel_axes`` (column-parallel
+    wi_gate/wi_up, row-parallel wo with a psum combine). A sharded plan
+    whose d_ff does not divide the axis pins ``ref`` (a bare Pallas call
+    cannot be SPMD-partitioned).
+    """
     act = activation_fn(act_name)
-    gate = jnp.einsum("ecd,edf->ecf", buf, wi_gate)
-    up = jnp.einsum("ecd,edf->ecf", buf, wi_up)
-    return jnp.einsum("ecf,efd->ecd", act(gate) * up, wo,
-                      preferred_element_type=buf.dtype)
+    axes = None
+    if plan is not None and not plan.is_null:
+        axes = plan.expert_kernel_axes(wi_gate.shape[-1])
+        if axes is None:
+            backend = kernel_ops.KernelBackend.REF
+    gate = kernel_ops.grouped_matmul(buf, wi_gate, shard_axes=axes,
+                                     sharded_dim="out", backend=backend)
+    up = kernel_ops.grouped_matmul(buf, wi_up, shard_axes=axes,
+                                   sharded_dim="out", backend=backend)
+    return kernel_ops.grouped_matmul(act(gate) * up, wo, shard_axes=axes,
+                                     sharded_dim="in", backend=backend)
 
 
 # ---------------------------------------------------------------------------
-def _moe_local(x_flat, moe_p, cfg: ModelConfig):
+def _moe_local(x_flat, moe_p, cfg: ModelConfig, backend=None):
     T = x_flat.shape[0]
     E = cfg.n_routed_experts
     C = capacity(T, cfg)
@@ -123,12 +135,12 @@ def _moe_local(x_flat, moe_p, cfg: ModelConfig):
     fe, pe, keep, fg = make_dispatch(idx, gates, E, C)
     buf, _ = dispatch(x_flat, fe, pe, E, C)
     y_buf = expert_ffn(buf, moe_p["wi_gate"], moe_p["wi_up"],
-                       moe_p["wo"], cfg.activation)
+                       moe_p["wo"], cfg.activation, backend=backend)
     y = combine(y_buf, fe, pe, keep, fg, T)
     return y, aux
 
 
-def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan):
+def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan, backend=None):
     """EP: experts sharded over plan.ep_axis; all_to_all token exchange.
 
     x_flat is (T, d) sharded over the DP axes; router weights replicated;
@@ -165,7 +177,10 @@ def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan):
         # exchange: every device sends E/ep expert-slabs to each peer
         buf = jax.lax.all_to_all(buf, ep_ax, split_axis=0, concat_axis=1,
                                  tiled=True)                # (E/ep, C_loc*ep, d)
-        y_buf = expert_ffn(buf, wig_l, wiu_l, wo_l, cfg.activation)
+        # already inside the EP shard_map: slabs are device-local, so the
+        # grouped kernel runs directly on them (plan=None at the seam)
+        y_buf = expert_ffn(buf, wig_l, wiu_l, wo_l, cfg.activation,
+                           backend=backend)
         y_buf = jax.lax.all_to_all(y_buf, ep_ax, split_axis=1, concat_axis=0,
                                    tiled=True)              # (E, C_loc, d)
         y = combine(y_buf, fe, pe, keep, fg, T_loc)
@@ -182,8 +197,10 @@ def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan):
     return y, jnp.mean(aux)
 
 
-def _moe_tp(x_flat, moe_p, cfg: ModelConfig, plan):
-    """TP: expert intermediate dim sharded; SPMD inserts the all-reduce."""
+def _moe_tp(x_flat, moe_p, cfg: ModelConfig, plan, backend=None):
+    """TP: expert intermediate dim sharded — the grouped kernel runs per
+    d_ff shard (``expert_ffn`` shard_map); on the ``ref`` backend SPMD
+    inserts the all-reduce for the einsum exactly as before."""
     T = x_flat.shape[0]
     E = cfg.n_routed_experts
     C = capacity(T, cfg)
@@ -192,24 +209,30 @@ def _moe_tp(x_flat, moe_p, cfg: ModelConfig, plan):
     buf, _ = dispatch(x_flat, fe, pe, E, C)
     buf = plan.constrain(buf, P(None, plan.dp, None))
     y_buf = expert_ffn(buf, moe_p["wi_gate"], moe_p["wi_up"],
-                       moe_p["wo"], cfg.activation)
+                       moe_p["wo"], cfg.activation, plan=plan,
+                       backend=backend)
     y_buf = plan.constrain(y_buf, P(None, plan.dp, None))
     y = combine(y_buf, fe, pe, keep, fg, T)
     return y, aux
 
 
 def apply_moe(x: jax.Array, moe_p: Dict[str, Any], cfg: ModelConfig,
-              plan) -> MoEOut:
-    """x: (B, S, d) -> MoEOut. Routed experts + optional shared experts."""
+              plan, backend=None) -> MoEOut:
+    """x: (B, S, d) -> MoEOut. Routed experts + optional shared experts.
+
+    ``backend`` selects the grouped-matmul kernel path for the expert
+    FFNs (DESIGN.md §4c) — threaded from the engine like the attention
+    backend, so decode-time expert compute joins the kernel seam.
+    """
     B, S, d = x.shape
     x_flat = x.reshape(B * S, d)
 
     if plan is None or plan.is_null:
-        y, aux = _moe_local(x_flat, moe_p, cfg)
+        y, aux = _moe_local(x_flat, moe_p, cfg, backend=backend)
     elif plan.ffn_mode == "ep" and plan.ep_axis is not None:
-        y, aux = _moe_ep_shardmap(x_flat, moe_p, cfg, plan)
+        y, aux = _moe_ep_shardmap(x_flat, moe_p, cfg, plan, backend=backend)
     else:
-        y, aux = _moe_tp(x_flat, moe_p, cfg, plan)
+        y, aux = _moe_tp(x_flat, moe_p, cfg, plan, backend=backend)
 
     if cfg.n_shared_experts:
         y_shared = glu_ffn(x_flat, moe_p["shared_wi_gate"],

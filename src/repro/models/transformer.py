@@ -114,7 +114,8 @@ def _sp_gather(h, plan):
     return h
 
 
-def _mixer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool):
+def _mixer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool,
+                backend=None):
     """Attention / mamba / hybrid sublayer. Returns (mixed, (k, v) or None)."""
     kv = None
     h = _sp_gather(rms_norm(x, lp["ln1"], cfg.norm_eps), plan)
@@ -122,18 +123,22 @@ def _mixer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool):
         w = attn_mod.AttnTemps(**lp["attn"])
         if collect_kv:
             out, kv = attn_mod.attention_block(h, w, cfg, flag, plan,
-                                               return_kv=True)
+                                               return_kv=True,
+                                               backend=backend)
         else:
-            out = attn_mod.attention_block(h, w, cfg, flag, plan)
+            out = attn_mod.attention_block(h, w, cfg, flag, plan,
+                                           backend=backend)
     elif cfg.block_type == "mamba":
         out = mamba_mod.mamba_mixer(h, lp["mamba"], cfg, plan)
     else:  # hybrid — parallel attention + mamba heads, normed fusion
         w = attn_mod.AttnTemps(**lp["attn"])
         if collect_kv:
             a_out, kv = attn_mod.attention_block(h, w, cfg, flag, plan,
-                                                 return_kv=True)
+                                                 return_kv=True,
+                                                 backend=backend)
         else:
-            a_out = attn_mod.attention_block(h, w, cfg, flag, plan)
+            a_out = attn_mod.attention_block(h, w, cfg, flag, plan,
+                                             backend=backend)
         m_out = mamba_mod.mamba_mixer(h, lp["mamba"], cfg, plan)
         out = 0.5 * (rms_norm(a_out, lp["fuse_norm_attn"], cfg.norm_eps)
                      + rms_norm(m_out, lp["fuse_norm_mamba"], cfg.norm_eps))
@@ -142,7 +147,7 @@ def _mixer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool):
     return out, kv
 
 
-def _ffn_full(x, lp, cfg: ModelConfig, plan):
+def _ffn_full(x, lp, cfg: ModelConfig, plan, backend=None):
     """FFN / MoE sublayer. Returns (out, aux_loss)."""
     if cfg.ffn_type == "none":
         return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
@@ -156,19 +161,20 @@ def _ffn_full(x, lp, cfg: ModelConfig, plan):
                             cfg.activation)
         aux = jnp.zeros((), jnp.float32)
     else:
-        res = moe_mod.apply_moe(h, lp["moe"], cfg, plan)
+        res = moe_mod.apply_moe(h, lp["moe"], cfg, plan, backend=backend)
         out, aux = res.y, res.aux_loss
     if cfg.use_post_norm:
         out = rms_norm(out, lp["ln2_post"], cfg.norm_eps)
     return out, aux
 
 
-def layer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool = False):
-    mixed, kv = _mixer_full(x, lp, flag, cfg, plan, collect_kv)
+def layer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool = False,
+               backend=None):
+    mixed, kv = _mixer_full(x, lp, flag, cfg, plan, collect_kv, backend)
     x = x + mixed
     if plan is not None and not plan.is_null:
         x = plan.constrain(x, plan.act_btd())
-    ffn_out, aux = _ffn_full(x, lp, cfg, plan)
+    ffn_out, aux = _ffn_full(x, lp, cfg, plan, backend)
     x = x + ffn_out
     if plan is not None and not plan.is_null:
         x = plan.constrain(x, plan.act_btd())
@@ -183,14 +189,21 @@ def _layer_flags(cfg: ModelConfig) -> jax.Array:
 
 
 def forward_hidden(params, cfg: ModelConfig, x: jax.Array, plan,
-                   collect_kv: bool = False, remat: bool = False):
-    """Scan the layer stack. Returns (hidden, (k_all, v_all) or None, aux)."""
+                   collect_kv: bool = False, remat: bool = False,
+                   backend="ref"):
+    """Scan the layer stack. Returns (hidden, (k_all, v_all) or None, aux).
+
+    ``backend`` pins the kernel seam to the jnp reference by default:
+    this entry is differentiated by training, and the Pallas kernels
+    define no VJP — the inference stack (``prefill``/``decode_step``)
+    threads the engine's backend instead.
+    """
     flags = _layer_flags(cfg)
 
     def body(carry, per_layer):
         h, aux_acc = carry
         lp, flag = per_layer
-        h, kv, aux = layer_full(h, lp, flag, cfg, plan, collect_kv)
+        h, kv, aux = layer_full(h, lp, flag, cfg, plan, collect_kv, backend)
         return (h, aux_acc + aux), kv
 
     if remat == "dots":
@@ -279,25 +292,31 @@ def init_paged_cache(cfg: ModelConfig, nslots: int, num_blocks: int,
 
 
 def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
-            max_len: int, plan=None) -> Tuple[jax.Array, DecodeCache]:
+            max_len: int, plan=None, backend=None
+            ) -> Tuple[jax.Array, DecodeCache]:
     """Process the prompt; return (last-position logits, primed cache).
 
     The KV cache is allocated at ``max_len`` and the prompt's K/V written at
     the front. Mamba state caches are produced by re-running the recurrence
     carry (collected from the chunked scan).
+
+    ``backend`` selects the kernel path for prefill attention and the
+    expert FFNs ("ref" | "pallas" | None for auto) — the engine threads
+    its ``kernel_backend`` here so prefill rides the same seam as decode
+    (DESIGN.md §Kernel backends).
     """
     assert cfg.causal, "prefill/decode only for decoder models"
     x = embed_inputs(params, cfg, batch, plan)
     B, S = x.shape[0], x.shape[1]
 
     flags = _layer_flags(cfg)
-    body = make_prefill_body(cfg, plan)
+    body = make_prefill_body(cfg, plan, backend)
     (h, _aux), ys = _scan(
         body, (x, jnp.zeros((), jnp.float32)), (params["layers"], flags))
     return _prefill_finish(params, cfg, h, ys, B, S, max_len, plan)
 
 
-def make_prefill_body(cfg: ModelConfig, plan):
+def make_prefill_body(cfg: ModelConfig, plan, backend=None):
     """The prefill layer-scan body (exposed for the dry-run cost probe)."""
     collect_kv = cfg.has_attention
 
@@ -312,7 +331,8 @@ def make_prefill_body(cfg: ModelConfig, plan):
             if cfg.block_type == "hybrid":
                 w = attn_mod.AttnTemps(**lp["attn"])
                 a_out, kv = attn_mod.attention_block(hn, w, cfg, flag,
-                                                     plan, return_kv=True)
+                                                     plan, return_kv=True,
+                                                     backend=backend)
                 out = 0.5 * (rms_norm(a_out, lp["fuse_norm_attn"],
                                       cfg.norm_eps)
                              + rms_norm(m_out, lp["fuse_norm_mamba"],
@@ -325,11 +345,11 @@ def make_prefill_body(cfg: ModelConfig, plan):
             h = h + out
             ys["conv"] = m_state[0]
             ys["ssm"] = m_state[1]
-            ffn_out, aux = _ffn_full(h, lp, cfg, plan)
+            ffn_out, aux = _ffn_full(h, lp, cfg, plan, backend)
             h = h + ffn_out
         else:
             h, kv, aux = layer_full(h, lp, flag, cfg, plan,
-                                    collect_kv=collect_kv)
+                                    collect_kv=collect_kv, backend=backend)
             ys["kv"] = kv
         return (h, aux_acc + aux), ys
 
@@ -540,7 +560,8 @@ def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None,
         if cfg.use_post_norm:
             out = rms_norm(out, lp["ln1_post"], cfg.norm_eps)
         h = h + out
-        ffn_out, _aux = _ffn_full(h, lp, cfg, plan)
+        # decode-time expert compute rides the same seam (grouped matmul)
+        ffn_out, _aux = _ffn_full(h, lp, cfg, plan, backend)
         h = h + ffn_out
         return h, ys
 

@@ -44,13 +44,17 @@ step, so admission never stalls decode for more than one chunk.
 Mamba/hybrid families (no chunked state append yet) fall back to the
 contiguous fixed-slot path.
 
-The decode hot path dispatches through the kernel-backend seam
-(``repro.kernels.ops.decode_attention``): the ``kernel_backend`` knob
-("ref" | "pallas" | None for auto, also reachable via
-``HAPSession.engine`` and ``serve.py --kernel-backend``) is threaded
-into every jitted decode/chunk/fused entry, so the same engine serves
-the pure-jnp reference math or the Pallas paged-attention kernel
-without recompiling anything else (DESIGN.md §Kernel backends).
+The whole hot path dispatches through the kernel-backend seam
+(``repro.kernels.ops``): the ``kernel_backend`` knob ("ref" | "pallas" |
+None for auto, also reachable via ``HAPSession.engine`` and ``serve.py
+--kernel-backend``) is threaded into every jitted entry — prefill
+(flash attention + grouped expert matmuls), decode/chunk/fused
+(paged-attention + grouped matmuls) — so the same engine serves the
+pure-jnp reference math or the Pallas kernels without recompiling
+anything else. Sharded plans run the kernels per shard via shard_map
+when the plan's dimensions divide its TP axis, and fall back to the
+partitioned reference math when they don't (DESIGN.md §Kernel
+backends).
 """
 
 from __future__ import annotations
@@ -214,8 +218,9 @@ class InferenceEngine:
         self.kv_block_size = kv_block_size
         self.kv_blocks = kv_blocks  # pool size override (blocks, sans trash)
         self.prefill_chunk = prefill_chunk  # None => one chunk per bucket
-        # decode attention kernel backend ("ref" | "pallas"); None/"auto"
-        # resolves per platform at dispatch (repro.kernels.ops)
+        # kernel backend for the serving hot path — prefill flash, decode
+        # attention AND the grouped expert matmuls ("ref" | "pallas");
+        # None/"auto" resolves per platform at dispatch (repro.kernels.ops)
         self.kernel_backend = kernel_backend
         self.stats = EngineStats()
         # False until a batch has executed under hap_plan: a pre-seeded
@@ -239,11 +244,11 @@ class InferenceEngine:
         return self._fn_cache[key]
 
     def _prefill_fn(self, plan):
-        cfg = self.cfg
+        cfg, be = self.cfg, self.kernel_backend
         return self._jit(
             ("prefill", plan),
             lambda: jax.jit(
-                lambda p, b, ml: prefill(p, cfg, b, max_len=ml, plan=plan),
+                lambda p, b, ml: prefill(p, cfg, b, max_len=ml, plan=plan, backend=be),
                 static_argnums=(2,),
             ),
         )

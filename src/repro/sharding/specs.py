@@ -30,6 +30,37 @@ from typing import Optional, Tuple  # noqa: F401
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax.shard_map (with check_vma) only exists in newer jax; older versions
+# ship it under jax.experimental with the check_rep spelling. The single
+# compat shim for every shard_map consumer (kernel seam, EP experts).
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+    SHARD_MAP_KW = {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+    SHARD_MAP_KW = {"check_rep": False}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelShardAxes:
+    """Plan -> shard_map axis resolution for the kernel seam (DESIGN.md §4c).
+
+    ``axis`` is the mesh axis the kernel-sharded dimension maps to
+    (attention heads for the decode/prefill attention kernels, expert
+    d_ff for the grouped matmuls). ``repro.kernels.ops`` wraps its Pallas
+    call in a ``shard_map`` over ``mesh`` with this axis on the sharded
+    dim and everything else replicated, so each device runs the fused
+    kernel on its own shard — the plans the ILP planner emits execute
+    the fast path instead of falling back to the jnp reference.
+    """
+    mesh: Mesh
+    axis: str
+
+    @property
+    def size(self) -> int:
+        return self.mesh.shape[self.axis]
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingPlan:
@@ -129,6 +160,41 @@ class ShardingPlan:
         """(B, S, d_inner) mamba activations: channels on the TP axis."""
         ax = self.ffn_tp_axis or self.attn_tp_axis
         return P(self.dp, None, ax)
+
+    # -- kernel-seam axis resolution (shard_map'ed Pallas dispatch) ----
+    def attn_kernel_axes(self, num_q_heads: int,
+                         num_kv_heads: int) -> Optional[KernelShardAxes]:
+        """shard_map axes for a heads-sharded attention kernel, or None
+        when the plan cannot run it per-shard — replicated attention, or
+        a head count that does not divide the TP axis (those keep the
+        jnp reference path under the same seam)."""
+        if (self.is_null or self.attn_mode != "tp_heads"
+                or self.attn_tp_axis is None):
+            return None
+        tp = self.axis_size(self.attn_tp_axis)
+        if num_q_heads % tp or num_kv_heads % tp:
+            return None
+        return KernelShardAxes(self.mesh, self.attn_tp_axis)
+
+    def decode_kernel_axes(self, num_q_heads: int,
+                           num_kv_heads: int) -> Optional[KernelShardAxes]:
+        """``attn_kernel_axes`` for the cache-appending decode step: the
+        KV cache itself must be heads-sharded too, so each device walks
+        its own head shard of the page pool (a seq-/seq_all-sharded cache
+        would have to be regathered per step)."""
+        if self.kv_shard != "heads":
+            return None
+        return self.attn_kernel_axes(num_q_heads, num_kv_heads)
+
+    def expert_kernel_axes(self, d_ff: int) -> Optional[KernelShardAxes]:
+        """shard_map axes for the TP grouped-expert matmuls (d_ff on the
+        ffn TP axis), or None when d_ff does not divide (or the experts
+        run EP, whose all_to_all shard_map already owns the mesh)."""
+        if self.is_null or self.ffn_mode != "tp" or self.ffn_tp_axis is None:
+            return None
+        if d_ff % self.axis_size(self.ffn_tp_axis):
+            return None
+        return KernelShardAxes(self.mesh, self.ffn_tp_axis)
 
 
 NULL_PLAN = ShardingPlan()

@@ -279,11 +279,13 @@ def test_paged_continuous_on_sharded_mesh():
     """Paged serve_continuous under a real heads-sharded TP mesh must
     stay token-exact vs solo runs ON THE SAME MESH (null-mesh outputs
     differ in psum reduction order, so the solo reference shares the
-    mesh). Both kernel backends are exercised: "ref" runs the jnp math
-    under the plan's constraints; "pallas" keeps the same seam (sharded
-    plans route to the reference path inside ``ops.decode_attention``)
-    and must produce identical tokens. Subprocess: forced host devices,
-    like the bridge tests."""
+    mesh). Both kernel backends are exercised and must produce identical
+    tokens: "ref" runs the jnp math under the plan's constraints;
+    "pallas" runs the shard_map'ed Pallas kernels per head/d_ff shard —
+    the trace-time dispatch probe (``ops.DISPATCH_COUNTS``) asserts the
+    kernels actually ran (decode attention + grouped expert matmuls in
+    the continuous loop; prefill flash in the static run), not the ref
+    fallback. Subprocess: forced host devices, like the bridge tests."""
     root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=2",
@@ -294,6 +296,7 @@ def test_paged_continuous_on_sharded_mesh():
         from repro.configs import get_config
         from repro.core import HAPSession
         from repro.core.hap import fixed_plan
+        from repro.kernels import ops as kernel_ops
         from repro.models import init_params
         from repro.serving import Request
 
@@ -315,6 +318,7 @@ def test_paged_continuous_on_sharded_mesh():
             eng.submit(Request(prompt=p, max_new_tokens=g))
             solo[uid] = eng.run()[0].tokens
         for backend in ('ref', 'pallas'):
+            kernel_ops.reset_dispatch_counts()
             eng = session().engine(params, max_batch=2, prefill_chunk=16,
                                    kv_block_size=8, kernel_backend=backend)
             for p, g in reqs:
@@ -323,6 +327,25 @@ def test_paged_continuous_on_sharded_mesh():
             assert eng._sharding_for('decode').kv_shard == 'heads'
             assert got == solo, (backend, got, solo)
             assert eng.stats.prefill_chunks == 1 + 2
+            counts = dict(kernel_ops.DISPATCH_COUNTS)
+            if backend == 'pallas':
+                # the heads-sharded plan must hit the shard_map'ed
+                # kernels, never the ref fallback
+                assert counts.get('decode.pallas_shard_map', 0) > 0, counts
+                assert counts.get('gmm.pallas_shard_map', 0) > 0, counts
+                assert counts.get('decode.ref_paged', 0) == 0, counts
+                assert counts.get('decode.ref_append', 0) == 0, counts
+            else:
+                assert counts.get('decode.pallas_shard_map', 0) == 0, counts
+        # static lockstep run under pallas: prefill rides the shard_map'ed
+        # flash kernel, contiguous decode the identity-table paged kernel
+        kernel_ops.reset_dispatch_counts()
+        eng = session().engine(params, max_batch=1, kernel_backend='pallas')
+        eng.submit(Request(prompt=reqs[0][0], max_new_tokens=reqs[0][1]))
+        assert eng.run()[0].tokens == solo[0]
+        counts = dict(kernel_ops.DISPATCH_COUNTS)
+        assert counts.get('flash.pallas_shard_map', 0) > 0, counts
+        assert counts.get('decode.pallas_shard_map', 0) > 0, counts
         print('OK')
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,

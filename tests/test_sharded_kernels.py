@@ -1,0 +1,361 @@
+"""Sharded-plan Pallas execution through the kernel seam (DESIGN.md §4c).
+
+Covers the dispatch layer's routing decisions — which plans hit the
+Pallas kernels (shard_map'ed per shard) and which keep the jnp
+reference — via the trace-time ``DISPATCH_COUNTS`` probe, plus
+ref↔pallas-interpret parity for the grouped-matmul op (fp32 / bf16 /
+INT4-dequant), the prefill flash seam, and the pos-dtype normalization
+at ``ops.decode_attention``. Mesh tests build over however many host
+devices exist (CI forces 4 via XLA_FLAGS; a 1-device mesh still executes
+the shard_map code path).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from conftest import reduced
+from repro.core.quantization import quantize_int4
+from repro.kernels import ops
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.sharding.specs import KernelShardAxes, ShardingPlan, make_plan
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+def _mesh():
+    devs = jax.devices()
+    return Mesh(np.array(devs).reshape(len(devs)), ("model",))
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul: ref <-> pallas parity across dtypes, incl. INT4-dequant
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,d,f", [(4, 24, 48, 40), (2, 128, 64, 96)])
+def test_grouped_matmul_op_parity(E, C, d, f, dtype):
+    """The op's two backends agree (shapes deliberately off the 128 tile
+    grid — the kernel must degrade to exact divisor tiles)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    lhs = jax.random.normal(k1, (E, C, d), dtype)
+    rhs = jax.random.normal(k2, (E, d, f), dtype)
+    a = ops.grouped_matmul(lhs, rhs, backend="ref")
+    b = ops.grouped_matmul(lhs, rhs, backend="pallas")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=_tol(dtype) * d ** 0.5, rtol=2e-2)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_int4_dequant_aware(out_dtype):
+    """A QuantizedWeight rhs is dequantized through the backend's dequant
+    path before the matmul; both backends agree with each other tightly
+    and with the dense weight within quantization error."""
+    E, C, d, f = 2, 16, 32, 64
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    lhs = jax.random.normal(k1, (E, C, d), out_dtype)
+    dense = jax.random.normal(k2, (E, d, f), jnp.float32)
+    qt = quantize_int4(np.asarray(dense), "per_group", group_size=128)
+    qw = ops.QuantizedWeight(packed=jnp.asarray(qt.packed),
+                             scales=jnp.asarray(qt.scales),
+                             zeros=jnp.asarray(qt.zeros), shape=(E, d, f))
+    a = ops.grouped_matmul(lhs, qw, backend="ref")
+    b = ops.grouped_matmul(lhs, qw, backend="pallas")
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=_tol(out_dtype) * d ** 0.5, rtol=2e-2)
+    dense_out = ops.grouped_matmul(lhs, dense.astype(out_dtype),
+                                   backend="ref")
+    err = np.linalg.norm(np.asarray(a, np.float32)
+                         - np.asarray(dense_out, np.float32))
+    # INT4 per-group round-trip error stays a small fraction of the
+    # output energy (not garbage / not a layout mix-up)
+    assert err / np.linalg.norm(np.asarray(dense_out, np.float32)) < 0.15
+
+
+def test_quantized_weight_crosses_jit_boundary():
+    """QuantizedWeight is a pytree with static shape aux data: it can be
+    passed INTO a jitted function (arrays trace, reshape stays concrete),
+    which the resident-INT4-weights follow-up relies on."""
+    E, C, d, f = 2, 8, 16, 32
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    lhs = jax.random.normal(k1, (E, C, d), jnp.float32)
+    dense = jax.random.normal(k2, (E, d, f), jnp.float32)
+    qt = quantize_int4(np.asarray(dense), "per_group", group_size=64)
+    qw = ops.QuantizedWeight(packed=jnp.asarray(qt.packed),
+                             scales=jnp.asarray(qt.scales),
+                             zeros=jnp.asarray(qt.zeros), shape=(E, d, f))
+    for be in ("ref", "pallas"):
+        fn = jax.jit(lambda ll, w, _be=be: ops.grouped_matmul(
+            ll, w, backend=_be))
+        got = fn(lhs, qw)
+        want = ops.grouped_matmul(lhs, qw, backend=be)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("sharded_dim", ["out", "in"])
+def test_grouped_matmul_shard_map_parity(sharded_dim):
+    """Column-/row-parallel shard_map'ed kernel vs the global reference
+    einsum (row-parallel psums partial products across the axis)."""
+    mesh = _mesh()
+    n = mesh.shape["model"]
+    E, C, d, f = 2, 16, 8 * n, 8 * n
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    lhs = jax.random.normal(k1, (E, C, d), jnp.float32)
+    rhs = jax.random.normal(k2, (E, d, f), jnp.float32)
+    axes = KernelShardAxes(mesh, "model")
+    got = ops.grouped_matmul(lhs, rhs, shard_axes=axes,
+                             sharded_dim=sharded_dim, backend="pallas")
+    want = ops.grouped_matmul(lhs, rhs, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_expert_ffn_tp_plan_kernel_parity():
+    """The full expert FFN under a TP plan: pallas (shard_map'ed grouped
+    kernels, psum combine) matches ref (partitioned einsum)."""
+    mesh = _mesh()
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    plan = make_plan(mesh, cfg, expert_mode="tp")
+    E, C, d, f = 4, 16, cfg.d_model, cfg.moe_d_ff
+    if f % mesh.shape["model"]:
+        pytest.skip("d_ff does not divide the mesh axis")
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    buf = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    wig = jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.05
+    wiu = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.05
+    wo = jax.random.normal(ks[3], (E, f, d), jnp.float32) * 0.05
+    ops.reset_dispatch_counts()
+    got = moe_mod.expert_ffn(buf, wig, wiu, wo, cfg.activation, plan=plan,
+                             backend="pallas")
+    assert ops.DISPATCH_COUNTS["gmm.pallas_shard_map"] == 3
+    want = moe_mod.expert_ffn(buf, wig, wiu, wo, cfg.activation, plan=plan,
+                              backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_expert_ffn_non_dividing_plan_pins_ref():
+    """A sharded plan whose d_ff does not divide the axis must pin the
+    reference path (a bare Pallas call cannot be SPMD-partitioned)."""
+    mesh = _mesh()
+    cfg = reduced("deepseek-moe-16b")
+    plan = dataclasses.replace(make_plan(mesh, cfg, expert_mode="tp"))
+    E, C, d = 2, 8, cfg.d_model
+    f = 3 * mesh.shape["model"] + 1  # never divides a >1 axis ... or any
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    buf = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    wig = jax.random.normal(ks[1], (E, d, f), jnp.float32)
+    wiu = jax.random.normal(ks[2], (E, d, f), jnp.float32)
+    wo = jax.random.normal(ks[3], (E, f, d), jnp.float32)
+    if plan.expert_kernel_axes(f) is not None:
+        pytest.skip("1-device axis divides everything")
+    ops.reset_dispatch_counts()
+    moe_mod.expert_ffn(buf, wig, wiu, wo, cfg.activation, plan=plan,
+                       backend="pallas")
+    assert ops.DISPATCH_COUNTS["gmm.ref"] == 3
+    assert ops.DISPATCH_COUNTS["gmm.pallas"] == 0
+
+
+# ---------------------------------------------------------------------------
+# prefill flash seam
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (8, 0.0), (8, 30.0)])
+def test_flash_attention_op_parity(window, softcap):
+    """ops.flash_attention (model layout, traced is_global) ref vs pallas,
+    for both flag values."""
+    B, S, Hq, Hkv, hd = 2, 48, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    for flag in (True, False):
+        fn = jax.jit(lambda f, be: ops.flash_attention(
+            q, k, v, is_global=f, window=window, softcap=softcap,
+            backend=be), static_argnums=(1,))
+        a = fn(jnp.asarray(flag), "ref")
+        b = fn(jnp.asarray(flag), "pallas")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_attention_block_pallas_matches_jnp_path():
+    """attention_block routed through the flash kernel agrees with the
+    chunked-jnp prefill math (null plan), incl. a sliding-window cfg with
+    the traced per-layer flag."""
+    cfg = dataclasses.replace(reduced("gemma2-9b"), dtype="float32")
+    assert cfg.sliding_window > 0 and cfg.attn_logit_softcap > 0
+    B, S = 2, 32
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    ks = jax.random.split(key, 4)
+    dh = cfg.num_heads * cfg.head_dim
+    dkv = cfg.num_kv_heads * cfg.head_dim
+    w = attn_mod.AttnTemps(
+        wq=jax.random.normal(ks[0], (cfg.d_model, dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (cfg.d_model, dkv)) * 0.05,
+        wv=jax.random.normal(ks[2], (cfg.d_model, dkv)) * 0.05,
+        wo=jax.random.normal(ks[3], (dh, cfg.d_model)) * 0.05)
+    for flag in (True, False):
+        run = jax.jit(lambda f, be: attn_mod.attention_block(
+            x, w, cfg, f, None, backend=be), static_argnums=(1,))
+        ops.reset_dispatch_counts()
+        got = run(jnp.asarray(flag), "pallas")
+        assert ops.DISPATCH_COUNTS["flash.pallas"] == 1
+        want = run(jnp.asarray(flag), "ref")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_attention_block_sharded_plan_uses_shard_map():
+    """A heads-sharded plan routes prefill attention through the
+    shard_map'ed flash kernel and matches the partitioned jnp path."""
+    mesh = _mesh()
+    cfg = reduced("deepseek-moe-16b")
+    if cfg.num_heads % mesh.shape["model"] or \
+            cfg.num_kv_heads % mesh.shape["model"]:
+        pytest.skip("heads do not divide the host-device axis")
+    plan = make_plan(mesh, cfg)
+    assert plan.attn_mode == "tp_heads"
+    B, S = 2, 16
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    ks = jax.random.split(key, 4)
+    dh = cfg.num_heads * cfg.head_dim
+    dkv = cfg.num_kv_heads * cfg.head_dim
+    w = attn_mod.AttnTemps(
+        wq=jax.random.normal(ks[0], (cfg.d_model, dh)) * 0.05,
+        wk=jax.random.normal(ks[1], (cfg.d_model, dkv)) * 0.05,
+        wv=jax.random.normal(ks[2], (cfg.d_model, dkv)) * 0.05,
+        wo=jax.random.normal(ks[3], (dh, cfg.d_model)) * 0.05)
+    run = jax.jit(lambda be: attn_mod.attention_block(
+        x, w, cfg, True, plan, backend=be), static_argnums=(0,))
+    ops.reset_dispatch_counts()
+    got = run("pallas")
+    assert ops.DISPATCH_COUNTS["flash.pallas_shard_map"] == 1
+    want = run("ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode dispatch routing + pos normalization at the seam
+# ---------------------------------------------------------------------------
+def _decode_case(B=2, C=1, Hq=4, Hkv=2, hd=16, bs=8, nb=4):
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    N = B * nb + 1
+    q = jax.random.normal(ks[0], (B, C, Hq, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, Hkv, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, Hkv, hd), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, C, Hkv, hd), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, C, Hkv, hd), jnp.float32)
+    tables = jnp.arange(1, N, dtype=jnp.int32).reshape(B, nb)
+    return q, kp, vp, kn, vn, tables
+
+
+def test_decode_pos_dtype_normalized_once():
+    """Python ints, int64 scalars and (B,) int32 vectors all normalize to
+    int32 at the seam and agree."""
+    q, kp, vp, kn, vn, tables = _decode_case()
+    outs = []
+    for pos in (5, np.int64(5), jnp.asarray(5, jnp.int32),
+                np.full((2,), 5, np.int64), jnp.full((2,), 5, jnp.int32)):
+        out, _, _ = ops.decode_attention(q, kp, vp, kn, vn, pos,
+                                         block_tables=tables, backend="ref")
+        outs.append(np.asarray(out))
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_contiguous_chunk_lockstep_message():
+    """The contiguous C>1 per-row-pos contract violation raises an
+    actionable error, not a bare assert."""
+    B, C, H, hd, S = 2, 4, 2, 8, 16
+    q = jnp.zeros((B, C, H, hd))
+    cache = jnp.zeros((B, S, H, hd))
+    new = jnp.zeros((B, C, H, hd))
+    with pytest.raises(ValueError, match="lockstep-only.*block_tables"):
+        ops.decode_attention(q, cache, cache, new, new,
+                             jnp.zeros((B,), jnp.int32))
+    with pytest.raises(ValueError, match="scalar or \\(B,\\)"):
+        ops.decode_attention(q, cache, cache, new, new,
+                             jnp.zeros((B, 1), jnp.int32))
+
+
+def test_repeat_kv_stays_on_ref():
+    """Non-dividing TP head replication must keep the reference math even
+    under the pallas backend (the kernel has no repeat_kv path)."""
+    q, kp, vp, kn, vn, tables = _decode_case(Hq=4, Hkv=2)
+    q2 = jnp.concatenate([q, q], axis=2)  # Hq=8 over Hkv=2 repeated 2x
+    ops.reset_dispatch_counts()
+    out_p, _, _ = ops.decode_attention(
+        q2, kp, vp, kn, vn, jnp.asarray(5), block_tables=tables,
+        repeat_kv=2, backend="pallas")
+    assert ops.DISPATCH_COUNTS["decode.ref_paged"] == 1
+    assert ops.DISPATCH_COUNTS["decode.pallas"] == 0
+    out_r, _, _ = ops.decode_attention(
+        q2, kp, vp, kn, vn, jnp.asarray(5), block_tables=tables,
+        repeat_kv=2, backend="ref")
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_r))
+
+
+def test_sharded_without_axes_stays_on_ref():
+    """A sharded plan that resolves no kernel axes (e.g. seq-sharded KV)
+    keeps ref even on the pallas backend."""
+    q, kp, vp, kn, vn, tables = _decode_case()
+    ops.reset_dispatch_counts()
+    ops.decode_attention(q, kp, vp, kn, vn, jnp.asarray(5),
+                         block_tables=tables, constrain=lambda c: c,
+                         backend="pallas")
+    assert ops.DISPATCH_COUNTS["decode.ref_paged"] == 1
+    assert ops.DISPATCH_COUNTS["decode.pallas_shard_map"] == 0
+
+
+def test_sharded_decode_shard_map_matches_ref():
+    """The shard_map'ed paged kernel on a real mesh is token-identical in
+    output and page contents to the reference scatter/gather path."""
+    mesh = _mesh()
+    n = mesh.shape["model"]
+    q, kp, vp, kn, vn, tables = _decode_case(Hq=4 * n, Hkv=2 * n)
+    pos = jnp.asarray([5, 9], jnp.int32)
+    axes = KernelShardAxes(mesh, "model")
+    ops.reset_dispatch_counts()
+    out_p, kp_p, vp_p = ops.decode_attention(
+        q, kp, vp, kn, vn, pos, block_tables=tables, shard_axes=axes,
+        backend="pallas")
+    assert ops.DISPATCH_COUNTS["decode.pallas_shard_map"] == 1
+    out_r, kp_r, vp_r = ops.decode_attention(
+        q, kp, vp, kn, vn, pos, block_tables=tables, backend="ref")
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               atol=2e-6, rtol=2e-6)
+    np.testing.assert_array_equal(np.asarray(kp_p), np.asarray(kp_r))
+    np.testing.assert_array_equal(np.asarray(vp_p), np.asarray(vp_r))
+
+
+def test_plan_kernel_axes_resolution():
+    """ShardingPlan -> KernelShardAxes: which plans map onto the kernels."""
+    mesh = _mesh()
+    n = mesh.shape["model"]
+    plan = ShardingPlan(mesh=mesh, attn_mode="tp_heads",
+                        attn_tp_axis="model", kv_shard="heads",
+                        ffn_mode="tp", ffn_tp_axis="model")
+    assert plan.decode_kernel_axes(4 * n, 2 * n) == \
+        KernelShardAxes(mesh, "model")
+    assert plan.decode_kernel_axes(4 * n + 1, 2 * n) is None or n == 1
+    assert dataclasses.replace(plan, kv_shard="seq").decode_kernel_axes(
+        4 * n, 2 * n) is None
+    assert dataclasses.replace(plan, attn_mode="replicated").attn_kernel_axes(
+        4 * n, 2 * n) is None
+    assert plan.expert_kernel_axes(8 * n) == KernelShardAxes(mesh, "model")
+    assert dataclasses.replace(plan, ffn_mode="ep").expert_kernel_axes(
+        8 * n) is None
+    null = ShardingPlan()
+    assert null.decode_kernel_axes(4, 2) is None
+    assert null.expert_kernel_axes(8) is None
