@@ -247,8 +247,9 @@ class HAPSession:
         dispatch through it, shard_map'ed per shard under sharded plans
         ("ref" | "pallas"; None resolves per platform — DESIGN.md
         §Kernel backends). Extra keywords (``paged``, ``kv_block_size``,
-        ``kv_blocks``, ``prefill_chunk``, ...) pass through to
-        ``InferenceEngine``.
+        ``kv_blocks``, ``prefill_chunk``, ``prefix_cache`` for
+        copy-on-write prompt-prefix block sharing — DESIGN.md §4d, ...)
+        pass through to ``InferenceEngine``.
         """
         from repro.serving.engine import InferenceEngine
         return InferenceEngine(cfg or self.cfg, params, session=self,

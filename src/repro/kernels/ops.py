@@ -60,7 +60,10 @@ from . import ref
 from .flash_attention import flash_attention as _flash_pallas
 from .grouped_matmul import grouped_matmul as _gmm_pallas
 from .int4_dequant import int4_dequant as _dequant_pallas
-from .paged_attention import paged_attention as _paged_pallas
+from .paged_attention import (
+    paged_attention as _paged_pallas,
+    prefix_paged_attention as _prefix_pallas,
+)
 
 
 class KernelBackend(str, enum.Enum):
@@ -247,6 +250,7 @@ def decode_attention(
     pos,
     *,
     block_tables=None,
+    prefix_groups=None,
     scale: Optional[float] = None,
     softcap: float = 0.0,
     window: int = 0,
@@ -268,6 +272,15 @@ def decode_attention(
     Hkv, hd)`` pages addressed through the ``(B, max_blocks)`` table.
     Returns ``(out, k_cache, v_cache)``.
 
+    ``prefix_groups`` (paged only) is the prefix-cache grouping from the
+    engine: a ``(2, B)`` int32 array — row 0 each row's prefix-group
+    representative, row 1 its shared leading block count (DESIGN.md
+    §4d). When given, shared table entries are resolved through the
+    representative's table so the kernel walks each shared physical
+    block once per group (``prefix_paged_attention`` /
+    ``ref.prefix_paged_attention_ref``); token-exact vs the unshared
+    path by construction.
+
     Dispatch: the Pallas kernel serves the unsharded cases directly and
     — when ``shard_axes`` resolves (a heads-sharded plan whose q AND kv
     head counts divide the TP axis, ``ShardingPlan.decode_kernel_axes``)
@@ -286,6 +299,8 @@ def decode_attention(
             "appends (continuous batching) require a paged cache — pass "
             "block_tables, or decode one token at a time."
         )
+    if prefix_groups is not None and block_tables is None:
+        raise ValueError("prefix_groups requires a paged cache (block_tables)")
     if sharded is None:
         sharded = constrain is not None or shard_axes is not None
     if (
@@ -301,6 +316,24 @@ def decode_attention(
             else block_tables
         )
         if shard_axes is None:
+            if prefix_groups is not None:
+                _record("decode.pallas_prefix")
+                return _prefix_pallas(
+                    q,
+                    k_cache,
+                    v_cache,
+                    tables,
+                    k_new,
+                    v_new,
+                    posv,
+                    prefix_groups[0],
+                    prefix_groups[1],
+                    is_global,
+                    scale=scale,
+                    softcap=softcap,
+                    window=window,
+                    interpret=interpret_mode(),
+                )
             _record("decode.pallas")
             return _paged_pallas(
                 q,
@@ -316,8 +349,59 @@ def decode_attention(
                 window=window,
                 interpret=interpret_mode(),
             )
-        _record("decode.pallas_shard_map")
         heads = P(None, None, shard_axes.axis, None)
+        if prefix_groups is not None:
+            _record("decode.pallas_prefix_shard_map")
+
+            def local_prefix_step(lq, lk, lv, lt, lkn, lvn, lp, lpg, lflag):
+                return _prefix_pallas(
+                    lq,
+                    lk,
+                    lv,
+                    lt,
+                    lkn,
+                    lvn,
+                    lp,
+                    lpg[0],
+                    lpg[1],
+                    lflag,
+                    scale=scale,
+                    softcap=softcap,
+                    window=window,
+                    interpret=interpret_mode(),
+                )
+
+            # same layout as the unshared map below; the grouping operand
+            # is replicated like the tables and write positions
+            fn = _shard_map(
+                local_prefix_step,
+                mesh=shard_axes.mesh,
+                in_specs=(
+                    heads,
+                    heads,
+                    heads,
+                    P(None, None),
+                    heads,
+                    heads,
+                    P(None),
+                    P(None, None),
+                    P(),
+                ),
+                out_specs=(heads, heads, heads),
+                **_SHARD_MAP_KW,
+            )
+            return fn(
+                q,
+                k_cache,
+                v_cache,
+                tables,
+                k_new,
+                v_new,
+                posv,
+                prefix_groups,
+                jnp.asarray(is_global),
+            )
+        _record("decode.pallas_shard_map")
 
         def local_step(lq, lk, lv, lt, lkn, lvn, lp, lflag):
             return _paged_pallas(
@@ -351,6 +435,26 @@ def decode_attention(
             q, k_cache, v_cache, tables, k_new, v_new, posv, jnp.asarray(is_global)
         )
     if block_tables is not None:
+        if prefix_groups is not None:
+            _record("decode.ref_prefix")
+            return ref.prefix_paged_attention_ref(
+                q,
+                k_cache,
+                v_cache,
+                block_tables,
+                k_new,
+                v_new,
+                pos,
+                prefix_groups[0],
+                prefix_groups[1],
+                is_global,
+                scale=scale,
+                softcap=softcap,
+                window=window,
+                trash_block=trash_block,
+                repeat_kv=repeat_kv,
+                constrain=constrain,
+            )
         _record("decode.ref_paged")
         return ref.paged_attention_ref(
             q,

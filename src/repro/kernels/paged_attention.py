@@ -141,6 +141,197 @@ def _paged_kernel(
         )
 
 
+def _prefix_kernel(
+    tables_ref,
+    pos_ref,
+    flags_ref,
+    reps_ref,
+    nsh_ref,
+    q_ref,
+    k_page_ref,
+    v_page_ref,
+    k_new_ref,
+    v_new_ref,
+    o_ref,
+    k_out_ref,
+    v_out_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    softcap: float,
+    window: int,
+    bs: int,
+    C: int,
+    G: int,
+    n_blocks: int,
+):
+    """Prefix-group variant of ``_paged_kernel``: grid (Hkv, n_blocks, B)
+    with the *row* axis innermost, so consecutive rows of one prefix
+    group hit the same physical page at a shared ``j`` — the page BlockSpec
+    resolves to the group representative's table entry there, and Pallas's
+    revisit elision skips the re-DMA (the shared block is walked once per
+    group, not once per row). Per-row online-softmax carries live in
+    row-indexed VMEM scratch since the row axis is no longer outermost."""
+    j = pl.program_id(1)  # page walk: sequential, but no longer innermost
+    b = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[b] = jnp.zeros_like(acc_ref[b])
+        m_ref[b] = jnp.full_like(m_ref[b], NEG_INF)
+        l_ref[b] = jnp.zeros_like(l_ref[b])
+
+    p0 = pos_ref[b]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs,), 0)
+
+    # fused chunk append — writes only ever land in exclusively-owned
+    # pages (pos[b] >= shared_blocks[b] * bs: COW ran before the step),
+    # so shared pages always copy through unchanged below
+    idx = kpos - p0
+    wmask = (idx >= 0) & (idx < C)
+    sel = idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (bs, C), 1)
+    sel = (sel & wmask[:, None]).astype(jnp.float32)  # (bs, C)
+
+    k_page = k_page_ref[0, :, 0, :].astype(jnp.float32)  # (bs, hd)
+    v_page = v_page_ref[0, :, 0, :].astype(jnp.float32)
+    k_new = k_new_ref[0, :, 0, :].astype(jnp.float32)  # (C, hd)
+    v_new = v_new_ref[0, :, 0, :].astype(jnp.float32)
+    k_page = jnp.where(wmask[:, None], jnp.dot(sel, k_new), k_page)
+    v_page = jnp.where(wmask[:, None], jnp.dot(sel, v_new), v_page)
+    k_out_ref[0, :, 0, :] = k_page.astype(k_out_ref.dtype)
+    v_out_ref[0, :, 0, :] = v_page.astype(v_out_ref.dtype)
+
+    q = q_ref[0, :, :, :].astype(jnp.float32).reshape(C * G, -1)
+    s = jnp.dot(q, k_page.T, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = p0 + jax.lax.broadcasted_iota(jnp.int32, (C, G), 0).reshape(C * G)
+    ok = kpos[None, :] <= qpos[:, None]  # causal — also kills stale slots
+    if window > 0:
+        win = ok & ((qpos[:, None] - kpos[None, :]) < window)
+        ok = jnp.where(flags_ref[0] != 0, ok, win)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[b]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[b] = l_ref[b] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[b] = acc_ref[b] * alpha[:, None] + jnp.dot(
+        p, v_page, preferred_element_type=jnp.float32
+    )
+    m_ref[b] = m_cur
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        lse = jnp.maximum(l_ref[b], 1e-30)
+        o_ref[0, :, :, :] = (acc_ref[b] / lse[:, None]).reshape(C, G, -1).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "window", "interpret"))
+def prefix_paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    group_reps: jax.Array,
+    shared_blocks: jax.Array,
+    is_global=True,
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    window: int = 0,
+    interpret: bool = True,
+):
+    """Prefix-group fused paged append + decode attention.
+
+    Same contract as ``paged_attention`` plus two (B,) scalar-prefetch
+    operands: ``group_reps[b]`` is row ``b``'s prefix-group representative
+    and ``shared_blocks[b]`` the number of leading block-table entries it
+    shares with that rep (identical physical ids — the engine contract,
+    DESIGN.md §4d). Shared entries are fetched through the rep's table
+    row; with the row axis innermost in the grid, every row of a group
+    revisits the rep's physical page at shared ``j`` and the page DMA is
+    elided after the first row. Token-exact vs ``paged_attention`` on the
+    rows' own tables (``ref.prefix_paged_attention_ref`` is the oracle).
+    """
+    B, C, Hq, hd = q.shape
+    bs, Hkv = k_pages.shape[1], k_pages.shape[2]
+    G = Hq // Hkv
+    assert Hq % Hkv == 0, "GQA requires q heads to divide over kv heads"
+    assert pos.shape == (B,), "pos must be a (B,) vector (broadcast scalars)"
+    assert group_reps.shape == (B,) and shared_blocks.shape == (B,)
+    n_blocks = block_tables.shape[1]
+    if scale is None:
+        scale = hd**-0.5
+    flags = jnp.asarray(is_global, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _prefix_kernel,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        bs=bs,
+        C=C,
+        G=G,
+        n_blocks=n_blocks,
+    )
+
+    def page_idx(h, j, b, tables, pos, flags, reps, nsh):
+        row = jnp.where(j < nsh[b], reps[b], b)
+        return (tables[row, j], 0, h, 0)
+
+    page_spec = pl.BlockSpec((1, bs, 1, hd), page_idx)
+    row_spec = pl.BlockSpec(
+        (1, C, 1, hd), lambda h, j, b, tables, pos, flags, reps, nsh: (b, 0, h, 0)
+    )
+    head_spec = pl.BlockSpec(
+        (1, C, G, hd), lambda h, j, b, tables, pos, flags, reps, nsh: (b, 0, h, 0)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(Hkv, n_blocks, B),
+        in_specs=[head_spec, page_spec, page_spec, row_spec, row_spec],
+        out_specs=[head_spec, page_spec, page_spec],
+        scratch_shapes=[
+            pltpu.VMEM((B, C * G, hd), jnp.float32),
+            pltpu.VMEM((B, C * G), jnp.float32),
+            pltpu.VMEM((B, C * G), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, Hq, hd), q.dtype),
+            jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+            jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype),
+        ],
+        # operand indices count the scalar-prefetch args: pages -> page outs
+        input_output_aliases={6: 1, 7: 2},
+        interpret=interpret,
+    )(
+        block_tables,
+        pos,
+        flags,
+        group_reps,
+        shared_blocks,
+        q,
+        k_pages,
+        v_pages,
+        k_new,
+        v_new,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "softcap", "window", "interpret"))
 def paged_attention(
     q: jax.Array,

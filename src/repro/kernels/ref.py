@@ -225,6 +225,62 @@ def paged_attention_ref(
     return out, k_pages, v_pages
 
 
+def prefix_paged_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    group_reps: jax.Array,
+    shared_blocks: jax.Array,
+    is_global=True,
+    *,
+    scale: Optional[float] = None,
+    softcap: float = 0.0,
+    window: int = 0,
+    trash_block: int = 0,
+    repeat_kv: int = 1,
+    constrain: Optional[Callable[[jax.Array], jax.Array]] = None,
+):
+    """Prefix-group paged attention (the prefix-aware kernel's oracle).
+
+    ``group_reps`` (B,) names each row's prefix-group representative (a
+    live row index; a row with no shared prefix is its own rep) and
+    ``shared_blocks`` (B,) how many leading block-table entries the row
+    shares with that representative. The engine guarantees the contract
+    (DESIGN.md §4d): within the shared range the member's own table holds
+    the *same* physical ids as the rep's, and every write position sits
+    at or past the shared region (copy-on-write runs before the step).
+    The oracle therefore routes shared entries through the rep's table —
+    exactly what the Pallas kernel's group-id scalar-prefetch operand
+    does so consecutive group rows revisit one physical page — and
+    defers the rest to ``paged_attention_ref``, making the two paths
+    token-exact by construction.
+    """
+    j = jnp.arange(block_tables.shape[1], dtype=jnp.int32)[None, :]
+    eff = jnp.where(
+        j < shared_blocks[:, None], block_tables[group_reps], block_tables
+    )
+    return paged_attention_ref(
+        q,
+        k_pages,
+        v_pages,
+        eff,
+        k_new,
+        v_new,
+        pos,
+        is_global,
+        scale=scale,
+        softcap=softcap,
+        window=window,
+        trash_block=trash_block,
+        repeat_kv=repeat_kv,
+        constrain=constrain,
+    )
+
+
 def append_attention_ref(
     q: jax.Array,
     k_cache: jax.Array,

@@ -21,6 +21,11 @@ bucket, and join/retire events are logged per request.
 "pallas" for the flash/paged-attention/grouped-matmul kernels — run per
 shard via shard_map under sharded plans; "auto" picks per platform) —
 DESIGN.md §Kernel backends.
+
+``--prefix-cache`` (continuous only) turns on prompt-prefix KV block
+sharing (DESIGN.md §4d): matched prefixes are adopted copy-on-write,
+their prefill chunks skipped, and per-run hit/COW/effective-need
+counters are printed after the drain.
 """
 from __future__ import annotations
 
@@ -66,6 +71,11 @@ def main() -> None:
                          "(0 = one chunk per prompt bucket)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="continuous: paged KV block size in tokens")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous: share prompt-prefix KV blocks "
+                         "across requests (refcounted, copy-on-write; "
+                         "admission charges the post-sharing block need "
+                         "— DESIGN.md §4d)")
     ap.add_argument("--kernel-backend", default="auto",
                     choices=["auto", "ref", "pallas"],
                     help="serving kernel backend: prefill flash, decode "
@@ -107,9 +117,12 @@ def main() -> None:
     # execution on local devices uses the reduced config (dev box)
     cfg = dataclasses.replace(full_cfg.reduced(), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
+    if args.prefix_cache and not args.continuous:
+        ap.error("--prefix-cache requires --continuous (paged serving)")
     engine = session.engine(params, cfg=cfg, max_batch=args.batch,
                             kv_block_size=args.kv_block_size,
                             prefill_chunk=args.prefill_chunk or None,
+                            prefix_cache=args.prefix_cache,
                             kernel_backend=None if args.kernel_backend == "auto"
                             else args.kernel_backend)
     rng = np.random.default_rng(0)
@@ -128,6 +141,11 @@ def main() -> None:
               f"{st.joins} joins over {st.decode_steps} decode steps, "
               f"{st.prefill_chunks} prefill chunks ({st.fused_steps} "
               f"fused; {st.batches} live-batch generations)")
+        if args.prefix_cache:
+            print(f"prefix cache: {st.prefix_hit_blocks} blocks / "
+                  f"{st.prefix_hit_tokens} tokens adopted, "
+                  f"{st.cow_copies} COW forks, effective block need "
+                  f"{st.effective_block_need} vs raw {st.raw_block_need}")
     else:
         print(f"served {len(done)} requests, {total_tok} tokens in "
               f"{st.batches} batches")

@@ -262,6 +262,7 @@ def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
                      is_global, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, plan,
                      block_tables: Optional[jax.Array] = None,
+                     prefix_groups: Optional[jax.Array] = None,
                      backend=None) -> tuple:
     """Cache-appending attention: one decode token or one prefill chunk.
 
@@ -281,7 +282,9 @@ def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
     logical positions to physical blocks (trash-block semantics and the
     causality-only validity argument live with the kernels —
     ``repro.kernels.ref.paged_attention_ref`` /
-    ``repro.kernels.paged_attention``).
+    ``repro.kernels.paged_attention``). ``prefix_groups`` (2, B) routes
+    shared prefix blocks through their group representative's table —
+    the prefix-cache kernel path (DESIGN.md §4d), paged only.
 
     This function is projection + dispatch: the scatter/gather/attend
     step itself runs in ``repro.kernels.ops.decode_attention`` under the
@@ -308,7 +311,8 @@ def decode_attention(x: jax.Array, w: AttnTemps, cfg: ModelConfig,
 
     out, k_cache, v_cache = kernel_ops.decode_attention(
         q, k_cache, v_cache, k_new, v_new, pos,
-        block_tables=block_tables, scale=_scale(cfg),
+        block_tables=block_tables, prefix_groups=prefix_groups,
+        scale=_scale(cfg),
         softcap=cfg.attn_logit_softcap, window=cfg.sliding_window,
         is_global=is_global, trash_block=TRASH_BLOCK, repeat_kv=repeat,
         constrain=constrain, shard_axes=shard_axes,

@@ -59,6 +59,11 @@ class DecodeCache(NamedTuple):
     block_tables: Optional[jax.Array] = None  # (B, max_blocks) int32 for a
     #                            paged cache (None => contiguous layout);
     #                            unused entries point at trash block 0
+    prefix_groups: Optional[jax.Array] = None  # (2, B) int32 prefix-cache
+    #                            grouping (paged only, DESIGN.md §4d):
+    #                            row 0 = each row's group representative,
+    #                            row 1 = shared leading block count; None
+    #                            disables the prefix-aware kernel path
 
 
 # ---------------------------------------------------------------------------
@@ -511,7 +516,8 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
         xs["conv"] = cache.conv
         xs["ssm"] = cache.ssm
 
-    body = make_decode_body(cfg, plan, pos, cache.block_tables, backend)
+    body = make_decode_body(cfg, plan, pos, cache.block_tables, backend,
+                            prefix_groups=cache.prefix_groups)
     h, ys = _scan(body, x, xs)
     new_cache = cache._replace(pos=pos + C)
     if cfg.has_attention:
@@ -523,12 +529,15 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
 
 
 def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None,
-                     backend=None):
+                     backend=None, prefix_groups=None):
     """The decode layer-scan body (exposed for the dry-run cost probe).
 
     ``block_tables`` (shared by every layer — one logical layout per
     request) switches the attention path to the paged layout;
-    ``backend`` picks the kernel implementation behind the dispatch.
+    ``prefix_groups`` (also layer-shared) additionally routes shared
+    prefix blocks through their group representative's table (DESIGN.md
+    §4d); ``backend`` picks the kernel implementation behind the
+    dispatch.
     """
 
     def body(h, per_layer):
@@ -540,7 +549,8 @@ def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None,
             w = attn_mod.AttnTemps(**lp["attn"])
             a_out, k_c, v_c = attn_mod.decode_attention(
                 hn, w, cfg, flag, per_layer["k"], per_layer["v"], pos, plan,
-                block_tables=block_tables, backend=backend)
+                block_tables=block_tables, prefix_groups=prefix_groups,
+                backend=backend)
             ys["k"], ys["v"] = k_c, v_c
             outs.append(("attn", a_out))
         if cfg.has_mamba:

@@ -81,6 +81,7 @@ from repro.models import (
     prefill,
 )
 from .kv_cache import TRASH_BLOCK, BlockAllocator, BlockTable, blocks_for
+from .prefix_cache import PrefixCache
 from .sampling import SamplingParams, sample
 from .scheduler import ContinuousScheduler, QueuedRequest
 
@@ -121,6 +122,12 @@ class EngineStats:
     decode_steps: int = 0  # continuous: decode steps executed
     prefill_chunks: int = 0  # continuous: prefill chunks processed
     fused_steps: int = 0  # continuous: chunk+decode fused iterations
+    # prefix-cache accounting (DESIGN.md §4d; zeros with the cache off):
+    prefix_hit_blocks: int = 0  # KV blocks adopted instead of recomputed
+    prefix_hit_tokens: int = 0  # prefill positions skipped via sharing
+    cow_copies: int = 0  # shared blocks forked at first write
+    raw_block_need: int = 0  # sum of unshared worst-case admission needs
+    effective_block_need: int = 0  # sum of post-sharing admission charges
 
 
 @dataclasses.dataclass
@@ -137,7 +144,12 @@ class _Slot:
     # paged-path state (None/empty on the contiguous fallback):
     table: Optional[BlockTable] = None  # this row's KV block table
     pending: List[np.ndarray] = dataclasses.field(default_factory=list)
-    filled: int = 0  # prompt tokens appended so far
+    filled: int = 0  # prompt tokens appended so far (starts past a
+    #                  matched shared prefix — positions jump the cached run)
+    mirrored: bool = False  # host table mirror holds this row's blocks
+    #                  (False until the first chunk: prefix-group
+    #                  membership requires real table entries, and dead
+    #                  decode writes must keep landing in the trash block)
 
     @property
     def prefilling(self) -> bool:
@@ -163,6 +175,8 @@ class _LiveBatch:
     allocator: Optional[BlockAllocator] = None  # paged path only
     max_blocks: int = 0  # block-table width
     tables: Optional[np.ndarray] = None  # (nslots, max_blocks) int32
+    prefix: Optional[PrefixCache] = None  # prompt-prefix index over this
+    #                  generation's pool (engine prefix_cache knob)
 
     def active(self) -> List[int]:
         """Rows decoding this step: admitted, prefill complete, not done."""
@@ -194,6 +208,7 @@ class InferenceEngine:
         kv_blocks: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
         kernel_backend: Optional[str] = None,
+        prefix_cache: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -218,6 +233,14 @@ class InferenceEngine:
         self.kv_block_size = kv_block_size
         self.kv_blocks = kv_blocks  # pool size override (blocks, sans trash)
         self.prefill_chunk = prefill_chunk  # None => one chunk per bucket
+        # prompt-prefix sharing over the paged pool (DESIGN.md §4d):
+        # matched prefixes are adopted (refcounted, COW on divergence),
+        # their prefill chunks skipped, admission charged the effective
+        # post-sharing block need, and the decode kernel walks shared
+        # blocks once per prefix group
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires the paged KV path")
+        self.prefix_caching = bool(prefix_cache)
         # kernel backend for the serving hot path — prefill flash, decode
         # attention AND the grouped expert matmuls ("ref" | "pallas");
         # None/"auto" resolves per platform at dispatch (repro.kernels.ops)
@@ -269,6 +292,20 @@ class InferenceEngine:
             ("chunk", plan),
             lambda: jax.jit(
                 lambda p, t, row, c: _chunk_append(p, cfg, t, row, c, plan, be)
+            ),
+        )
+
+    def _cow_fn(self):
+        """Copy-on-write fork: duplicate pool pages ``src`` into ``dst``
+        across every layer, in one device call (prefix-cache divergence —
+        DESIGN.md §4d)."""
+        return self._jit(
+            ("cow",),
+            lambda: jax.jit(
+                lambda k, v, src, dst: (
+                    k.at[:, dst].set(k[:, src]),
+                    v.at[:, dst].set(v[:, src]),
+                )
             ),
         )
 
@@ -572,12 +609,14 @@ class InferenceEngine:
                 else min(sum(needs), nslots * max_blocks)
             )
             pool = max(pool, max(needs))  # the head must stay admittable
+            allocator = BlockAllocator(pool + 1, bs)
             self._live = _LiveBatch(
                 kv_capacity=max_blocks * bs,
                 slots=[None] * nslots,
                 pos=np.zeros((nslots,), np.int32),
                 next_tok=np.zeros((nslots,), np.int32),
-                allocator=BlockAllocator(pool + 1, bs),
+                allocator=allocator,
+                prefix=PrefixCache(allocator) if self.prefix_caching else None,
                 max_blocks=max_blocks,
                 tables=np.full((nslots, max_blocks), TRASH_BLOCK, np.int32),
                 cache=init_paged_cache(
@@ -628,7 +667,9 @@ class InferenceEngine:
             if not free:
                 break
             if self.paged:
-                r = self.scheduler.next_fit_blocks(live.allocator, live.kv_capacity)
+                r = self.scheduler.next_fit_blocks(
+                    live.allocator, live.kv_capacity, prefix_cache=live.prefix
+                )
             else:
                 r = self.scheduler.next_fit(live.kv_capacity)
             if r is None:
@@ -663,14 +704,38 @@ class InferenceEngine:
         if self.paged:
             # reserve the worst-case block budget now (deadlock safety);
             # blocks materialize lazily as chunks land and decode runs
-            slot.table = BlockTable(live.allocator, self.scheduler.kv_need(r))
             toks, _ = self.scheduler.pad_batch([r])
+            skip = 0
+            if live.prefix is not None:
+                # re-plan against the cache (consistent with the admission
+                # check: nothing registers or evicts in between) and adopt
+                # the matched run — the table starts with the shared
+                # blocks, reserving only the unmatched remainder
+                ap = live.prefix.plan_admission(toks[0], self.scheduler.kv_need(r))
+                skip = ap.skip
+                slot.table = BlockTable(
+                    live.allocator,
+                    self.scheduler.kv_need(r),
+                    shared_blocks=ap.adopt,
+                    shared_partial=ap.adopt_partial,
+                )
+                self.stats.prefix_hit_blocks += len(ap.adopt)
+                self.stats.prefix_hit_tokens += skip
+                self.stats.raw_block_need += ap.raw_blocks
+                self.stats.effective_block_need += ap.reserve_blocks
+            else:
+                slot.table = BlockTable(live.allocator, self.scheduler.kv_need(r))
             chunk = self.prefill_chunk or self.scheduler.bucket
             slot.pending = [
-                toks[0, o : o + chunk] for o in range(0, toks.shape[1], chunk)
+                toks[0, o : o + chunk] for o in range(skip, toks.shape[1], chunk)
             ]
+            slot.filled = skip
+            # the mirror stays all-trash until the first chunk lands
+            # (_ensure_blocks): the fused decode half scatters this row's
+            # dead writes, and they must hit the trash block — never an
+            # adopted shared page
             live.tables[i, :] = TRASH_BLOCK
-            live.pos[i] = 0
+            live.pos[i] = skip
             live.next_tok[i] = 0
             # decode-phase activation: a switching plan serves fused
             # chunk+decode steps under its decode layout, and a reused
@@ -763,24 +828,76 @@ class InferenceEngine:
             self.step_decode(sampling, key)
         return True
 
-    def _ensure_blocks(self, i: int, n_tokens: int) -> None:
+    def _ensure_blocks(
+        self, i: int, n_tokens: int, write_from: Optional[int] = None
+    ) -> None:
         """Lazy block allocation: grow row ``i``'s table to cover
-        ``n_tokens`` cache rows and refresh the host table mirror."""
+        ``n_tokens`` cache rows and refresh the host table mirror.
+
+        ``write_from`` is the first cache position the caller is about to
+        write (a prefill chunk's start, or the decode position): any
+        shared block overlapping it is forked first — the (src, dst) page
+        copies land on device *before* the write, so the cached prefix
+        stays immutable (copy-on-write, DESIGN.md §4d)."""
         live = self._live
         s = live.slots[i]
         if s is None or s.table is None:
             return
+        dirty = not s.mirrored
+        if write_from is not None:
+            copies = s.table.ensure_writable(write_from)
+            if copies:
+                src = jnp.asarray([c[0] for c in copies], jnp.int32)
+                dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+                k, v = self._cow_fn()(live.cache.k, live.cache.v, src, dst)
+                live.cache = live.cache._replace(k=k, v=v)
+                self.stats.cow_copies += len(copies)
+                dirty = True
         if s.table.capacity_tokens < n_tokens:
             s.table.ensure_tokens(n_tokens)
+            dirty = True
+        if dirty:
             live.tables[i] = s.table.padded(live.max_blocks)
+            s.mirrored = True
+
+    def _prefix_group_arrays(self) -> np.ndarray:
+        """The (2, nslots) prefix-group operand for the decode kernel:
+        row 0 maps every slot to its group representative (itself when
+        unshared), row 1 holds the leading shared-block count. Rows whose
+        first ``n_shared`` physical blocks are identical form one group —
+        the kernel walks those pages through the representative's table,
+        so a shared prefix is streamed once per group, not once per row.
+        Only mirrored slots participate: before its first chunk a row's
+        mirror is all-trash and must not anchor (or join) a group."""
+        live = self._live
+        n = len(live.slots)
+        reps = np.arange(n, dtype=np.int32)
+        nsh = np.zeros((n,), np.int32)
+        first: Dict[tuple, int] = {}
+        for i, s in enumerate(live.slots):
+            if s is None or s.table is None or not s.mirrored:
+                continue
+            if s.table.n_shared == 0:
+                continue
+            key = tuple(s.table.blocks[: s.table.n_shared])
+            rep = first.setdefault(key, i)
+            if rep != i:
+                reps[i] = rep
+                nsh[i] = s.table.n_shared
+        return np.stack([reps, nsh])
 
     def _pinned_cache(self):
         """The live cache with host-side pos (and block tables) pinned in,
-        so drained slots stay frozen while live rows advance."""
+        so drained slots stay frozen while live rows advance. With the
+        prefix cache on, the per-step group map rides along the same way."""
         live = self._live
         cache = live.cache._replace(pos=jnp.asarray(live.pos))
         if self.paged:
             cache = cache._replace(block_tables=jnp.asarray(live.tables))
+            if live.prefix is not None:
+                cache = cache._replace(
+                    prefix_groups=jnp.asarray(self._prefix_group_arrays())
+                )
         return cache
 
     def _prefill_chunk_step(
@@ -795,13 +912,15 @@ class InferenceEngine:
         chunk = s.pending.pop(0)
         C = len(chunk)
         final = not s.pending
-        self._ensure_blocks(i, s.filled + C)
+        self._ensure_blocks(i, s.filled + C, write_from=s.filled)
         plan = self._sharding_for("decode")
         self.stats.prefill_chunks += 1
 
         if active and not final:
             for j in active:
-                self._ensure_blocks(j, int(live.pos[j]) + 1)
+                self._ensure_blocks(
+                    j, int(live.pos[j]) + 1, write_from=int(live.pos[j])
+                )
             fn = self._fused_fn(plan)
             t0 = time.perf_counter()
             logits, live.cache = fn(
@@ -848,6 +967,13 @@ class InferenceEngine:
             live.next_tok[i] = tok0
             if s.req.max_new_tokens >= 1:
                 s.tokens.append(tok0)
+            if live.prefix is not None:
+                # index the completed prompt so later admissions can adopt
+                # it; the cache takes its own block references, so the run
+                # outlives this request's retirement until evicted
+                live.prefix.register(
+                    self.scheduler.pad_batch([s.req])[0][0], s.table.blocks
+                )
             log.info(
                 "prefill complete uid=%d slot=%d (%d tokens, %d blocks)",
                 s.req.uid,
@@ -879,7 +1005,9 @@ class InferenceEngine:
         active = live.active()
         if self.paged:
             for j in active:
-                self._ensure_blocks(j, int(live.pos[j]) + 1)
+                self._ensure_blocks(
+                    j, int(live.pos[j]) + 1, write_from=int(live.pos[j])
+                )
         decode_fn = self._decode_fn(self._sharding_for("decode"))
         t0 = time.perf_counter()
         logits, live.cache = decode_fn(
@@ -924,6 +1052,9 @@ def _chunk_append(params, cfg: ModelConfig, chunk_tok, row, cache, plan, backend
     sub = cache._replace(
         block_tables=jax.lax.dynamic_slice_in_dim(cache.block_tables, row, 1, axis=0),
         pos=jax.lax.dynamic_slice_in_dim(cache.pos, row, 1, axis=0),
+        # the row's own table already holds any adopted shared blocks, so
+        # the B=1 chunk append reads them directly — no group indirection
+        prefix_groups=None,
     )
     logits, sub = decode_step(params, cfg, chunk_tok, sub, plan=plan, backend=backend)
     cache = cache._replace(

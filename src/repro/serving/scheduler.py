@@ -136,18 +136,40 @@ class ContinuousScheduler(FifoScheduler):
             return None
         return self._q.popleft()
 
-    def next_fit_blocks(self, allocator, max_tokens: int) -> Optional[QueuedRequest]:
+    def next_fit_blocks(
+        self, allocator, max_tokens: int, prefix_cache=None
+    ) -> Optional[QueuedRequest]:
         """Paged admission: pop the queue head iff its worst-case KV need
         fits the block-table width (``max_tokens``) AND the allocator can
         reserve enough free blocks for it — the block-granular replacement
         for the contiguous ``next_fit`` capacity check. A head blocked on
-        blocks (not width) becomes admittable as live rows retire."""
+        blocks (not width) becomes admittable as live rows retire.
+
+        With a ``prefix_cache`` the head is charged its *effective*
+        post-sharing need: blocks covered by a verified shared-prefix
+        match are adopted, not allocated, so only the unmatched suffix
+        counts against the pool (plus one spare for a partially-shared
+        tail block's pending copy-on-write fork). A head short on blocks
+        first tries evicting cache-only prefix entries (oldest first,
+        never the blocks its own match relies on) before giving up.
+        """
         head = self.peek()
         if head is None:
             return None
         need = self.kv_need(head)
         if need > max_tokens:
             return None
-        if not allocator.can_admit(allocator.blocks_for(need)):
-            return None
+        if prefix_cache is None:
+            if not allocator.can_admit(allocator.blocks_for(need)):
+                return None
+            return self._q.popleft()
+        toks, _ = self.pad_batch([head])
+        plan = prefix_cache.plan_admission(toks[0], need)
+        if not allocator.can_admit(plan.reserve_blocks):
+            prefix_cache.evict(
+                plan.reserve_blocks - allocator.num_available,
+                keep=set(plan.match.blocks),
+            )
+            if not allocator.can_admit(plan.reserve_blocks):
+                return None
         return self._q.popleft()
