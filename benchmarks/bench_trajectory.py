@@ -1,0 +1,160 @@
+"""Perf-trajectory merge for the CI bench-smoke job.
+
+Each bench-smoke run produces point-in-time ``BENCH_*.json`` artifacts;
+this script threads them into a **trajectory**: it loads the previous
+successful run's ``BENCH_trajectory.json`` (downloaded by CI from the
+last green run's ``bench-smoke`` artifact), appends a snapshot of the
+current run's artifacts, writes the merged ``BENCH_trajectory.json``
+(capped history) and prints a markdown trend table — CI appends it to
+``$GITHUB_STEP_SUMMARY`` so the tok/s, speedup and kernel-parity
+trajectory is visible per PR without downloading anything.
+
+Usage (mirrors the ci.yml bench-trajectory step)::
+
+    python benchmarks/bench_trajectory.py --prev prev --current . \
+        --out BENCH_trajectory.json --summary "$GITHUB_STEP_SUMMARY"
+
+``--prev`` may be missing or empty (first run, expired artifacts): the
+trajectory then starts at this run. Run id / commit come from
+``GITHUB_RUN_ID`` / ``GITHUB_SHA`` unless overridden by flags.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from datetime import datetime, timezone
+
+MAX_HISTORY = 20
+
+# columns: (header, entry key, format)
+COLUMNS = (
+    ("run", "run_id", "{}"),
+    ("commit", "commit7", "{}"),
+    ("static tok/s", "static_tok_per_s", "{:.0f}"),
+    ("cont tok/s", "continuous_tok_per_s", "{:.0f}"),
+    ("cont x", "continuous_speedup", "{:.2f}"),
+    ("prefix x", "prefix_speedup", "{:.2f}"),
+    ("int4 tok/s", "int4_tok_per_s", "{:.0f}"),
+    ("int4 rel", "int4_relative", "{:.2f}"),
+    ("gmm int4 err", "gmm_int4_max_err", "{:.1e}"),
+    ("parity", "kernel_parity_ok", "{}"),
+)
+
+
+def _load(path: str) -> dict:
+    if not os.path.isfile(path):
+        return {}
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _get(d: dict, *keys):
+    for k in keys:
+        if not isinstance(d, dict):
+            return None
+        d = d.get(k)
+    return d
+
+
+def snapshot(current_dir: str) -> dict:
+    """One trajectory entry's metrics from a run's BENCH_*.json set.
+    Missing artifacts contribute nulls, never failures — the trajectory
+    is reporting, not gating (check_regression.py gates)."""
+    smoke = _load(os.path.join(current_dir, "BENCH_scenario_speedup.json"))
+    prefix = _load(os.path.join(current_dir, "BENCH_shared_prefix.json"))
+    ri = _load(os.path.join(current_dir, "BENCH_resident_int4.json"))
+    kb = _load(os.path.join(current_dir, "BENCH_kernel_bench.json"))
+    h2h = smoke.get("continuous_vs_static", {})
+    r = ri.get("resident_int4", {})
+    return {
+        "static_tok_per_s": h2h.get("static_tok_per_s"),
+        "continuous_tok_per_s": h2h.get("continuous_tok_per_s"),
+        "continuous_speedup": h2h.get("speedup"),
+        "solo_exact": h2h.get("solo_exact"),
+        "prefix_speedup": _get(prefix, "shared_prefix", "speedup"),
+        "int4_tok_per_s": r.get("int4_tok_per_s"),
+        "int4_relative": r.get("relative_tok_per_s"),
+        "max_experts_int4": r.get("max_experts_int4"),
+        "roundtrip_exact": r.get("roundtrip_exact"),
+        "gmm_int4_max_err": _get(
+            kb, "grouped_matmul", "points", "int4", "max_err"
+        ),
+        "paged_max_err": _get(kb, "paged_decode", "points", "bs8x8", "max_err"),
+        "kernel_parity_ok": kb.get("parity_ok"),
+    }
+
+
+def merge(prev_traj: dict, entry: dict) -> dict:
+    history = list(prev_traj.get("history", []))
+    history.append(entry)
+    return {
+        "benchmark": "bench_trajectory",
+        "note": "perf trajectory across CI bench-smoke runs; newest last",
+        "history": history[-MAX_HISTORY:],
+    }
+
+
+def _fmt(entry: dict, key: str, fmt: str) -> str:
+    v = entry.get(key)
+    if v is None:
+        return "-"
+    try:
+        return fmt.format(v)
+    except (ValueError, TypeError):
+        return str(v)
+
+
+def markdown_table(history) -> str:
+    lines = ["### Bench trajectory (newest last)", ""]
+    lines.append("| " + " | ".join(h for h, _, _ in COLUMNS) + " |")
+    lines.append("|" + "---|" * len(COLUMNS))
+    for e in history:
+        e = dict(e, commit7=str(e.get("commit", ""))[:7])
+        lines.append(
+            "| " + " | ".join(_fmt(e, k, f) for _, k, f in COLUMNS) + " |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--prev", default="prev",
+                    help="directory with the previous run's bench-smoke "
+                    "artifacts (may be missing: trajectory starts here)")
+    ap.add_argument("--current", default=".",
+                    help="directory with this run's BENCH_*.json")
+    ap.add_argument("--out", default="BENCH_trajectory.json")
+    ap.add_argument("--summary", default="",
+                    help="markdown trend table target (e.g. "
+                    "$GITHUB_STEP_SUMMARY); appended, stdout always")
+    ap.add_argument("--run-id", default=os.environ.get("GITHUB_RUN_ID", "local"))
+    ap.add_argument("--commit", default=os.environ.get("GITHUB_SHA", ""))
+    args = ap.parse_args()
+
+    entry = {
+        "run_id": args.run_id,
+        "commit": args.commit,
+        "date": datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+        **snapshot(args.current),
+    }
+    prev = _load(os.path.join(args.prev, "BENCH_trajectory.json"))
+    traj = merge(prev, entry)
+    with open(args.out, "w") as f:
+        json.dump(traj, f, indent=2, sort_keys=True)
+        f.write("\n")
+    table = markdown_table(traj["history"])
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(table + "\n")
+    print(f"wrote {args.out} ({len(traj['history'])} entries, "
+          f"prev={'found' if prev else 'none'})")
+
+
+if __name__ == "__main__":
+    main()

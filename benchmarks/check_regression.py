@@ -9,23 +9,47 @@ payload::
       "metrics": {
         "continuous_vs_static.speedup": {"value": 1.25, "max_regression": 0.15},
         "continuous_vs_static.solo_exact": {"value": true}
+      },
+      "suites": {
+        "kernel_bench": {
+          "metrics": {
+            "grouped_matmul.points.int4.max_err": {"max_value": 0.05},
+            "grouped_matmul.points.int4.pallas_interp_us":
+                {"value": 900.0, "max_increase": 3.0}
+          }
+        }
       }
     }
 
-- numeric entries are higher-is-better: fresh >= value * (1 - max_regression)
-  (default tolerance 0.15; absolute tok/s entries carry a wider tolerance
-  in the committed baseline because CI machines vary — the speedup RATIO
-  is the machine-independent gate),
-- boolean entries must match exactly (the greedy-equivalence gate).
+Entry semantics:
+
+- numeric ``value`` entries are higher-is-better:
+  fresh >= value * (1 - max_regression) (default tolerance 0.15;
+  absolute tok/s entries carry a wider tolerance in the committed
+  baseline because CI machines vary — ratios are the machine-independent
+  gates),
+- boolean ``value`` entries must match exactly (greedy-equivalence
+  gates),
+- ``max_value`` entries are absolute ceilings: fresh <= max_value
+  (kernel parity errors — no baseline value involved),
+- ``value`` + ``max_increase`` entries are lower-is-better walltime
+  bands: fresh <= value * (1 + max_increase) (kernel microbench times;
+  the committed band is deliberately wide — it catches order-of-
+  magnitude collapses, not jitter).
+
+Top-level ``metrics`` gate the default artifact (scenario_speedup
+--smoke). ``suites`` hold additional named gate sets for other
+artifacts, selected with ``--suite NAME``.
 
 Usage::
 
     python benchmarks/check_regression.py BENCH_scenario_speedup.json \
-        [--baseline benchmarks/baseline.json] [--update]
+        [--baseline benchmarks/baseline.json] [--suite NAME] [--update]
 
-``--update`` rewrites the baseline's values from the fresh run (keeping
-each metric's tolerance) — run it locally when a PR legitimately moves
-the numbers, and commit the result.
+``--update`` rewrites the selected gate set's baseline values from the
+fresh run (keeping each metric's tolerance; ``max_value`` ceilings are
+left untouched) — run it locally when a PR legitimately moves the
+numbers, and commit the result.
 """
 
 from __future__ import annotations
@@ -47,32 +71,63 @@ def resolve(payload, dotted_path):
     return cur
 
 
-def check(payload: dict, baseline: dict):
+def select_metrics(baseline: dict, suite: str | None) -> dict:
+    """The gate set to run: top-level ``metrics`` or a named suite's."""
+    if suite is None:
+        return baseline.get("metrics", {})
+    suites = baseline.get("suites", {})
+    if suite not in suites:
+        raise KeyError(f"suite {suite!r} not in baseline "
+                       f"(have: {sorted(suites)})")
+    return suites[suite].get("metrics", {})
+
+
+def check_one(path: str, spec: dict, payload: dict):
+    """One gate row: (path, want, got, verdict-str, ok)."""
+    got = resolve(payload, path)
+    if "max_value" in spec:
+        want = spec["max_value"]
+        if got is None:
+            return (path, f"<={want}", "MISSING", "FAIL", False)
+        good = float(got) <= float(want)
+        return (path, f"<={want}", got,
+                "ok" if good else f"FAIL (> {want})", good)
+    want = spec["value"]
+    if got is None:
+        return (path, want, "MISSING", "FAIL", False)
+    if isinstance(want, bool):
+        good = got == want
+        return (path, want, got, "ok" if good else "FAIL", good)
+    if "max_increase" in spec:
+        band = float(want) * (1.0 + float(spec["max_increase"]))
+        good = float(got) <= band
+        return (path, want, got,
+                "ok" if good else f"FAIL (> {band:.3f})", good)
+    tol = float(spec.get("max_regression", DEFAULT_TOLERANCE))
+    floor = want * (1.0 - tol)
+    good = float(got) >= floor
+    return (path, want, got, "ok" if good else f"FAIL (< {floor:.3f})", good)
+
+
+def check(payload: dict, baseline: dict, suite: str | None = None):
     """Returns (rows, ok): one row per gated metric, overall verdict."""
     rows = []
     ok = True
-    for path, spec in baseline.get("metrics", {}).items():
-        want = spec["value"]
-        got = resolve(payload, path)
-        if got is None:
-            rows.append((path, want, "MISSING", "FAIL"))
-            ok = False
-        elif isinstance(want, bool):
-            good = got == want
-            rows.append((path, want, got, "ok" if good else "FAIL"))
-            ok &= good
-        else:
-            tol = float(spec.get("max_regression", DEFAULT_TOLERANCE))
-            floor = want * (1.0 - tol)
-            good = float(got) >= floor
-            verdict = "ok" if good else f"FAIL (< {floor:.3f})"
-            rows.append((path, want, got, verdict))
-            ok &= good
+    for path, spec in select_metrics(baseline, suite).items():
+        path_, want, got, verdict, good = check_one(path, spec, payload)
+        rows.append((path_, want, got, verdict))
+        ok &= good
     return rows, ok
 
 
-def update_baseline(payload: dict, baseline: dict) -> dict:
-    for path, spec in baseline.get("metrics", {}).items():
+def update_baseline(payload: dict, baseline: dict,
+                    suite: str | None = None) -> dict:
+    """Refresh the selected gate set's ``value`` entries from the fresh
+    payload (``max_value`` ceilings are policy, not measurements —
+    untouched). Returns the whole baseline for rewriting."""
+    for path, spec in select_metrics(baseline, suite).items():
+        if "max_value" in spec:
+            continue
         got = resolve(payload, path)
         if got is not None:
             spec["value"] = got
@@ -89,9 +144,16 @@ def main() -> None:
         help="committed baseline (default: benchmarks/baseline.json)",
     )
     ap.add_argument(
+        "--suite",
+        default=None,
+        help="gate against a named suite in the baseline instead of the "
+        "top-level metrics (e.g. kernel_bench, resident_int4)",
+    )
+    ap.add_argument(
         "--update",
         action="store_true",
-        help="rewrite the baseline values from the fresh run and exit",
+        help="rewrite the selected gate set's baseline values from the "
+        "fresh run and exit",
     )
     args = ap.parse_args()
 
@@ -101,14 +163,15 @@ def main() -> None:
         baseline = json.load(f)
 
     if args.update:
+        update_baseline(payload, baseline, args.suite)
         with open(args.baseline, "w") as f:
-            json.dump(update_baseline(payload, baseline), f, indent=2,
-                      sort_keys=True)
+            json.dump(baseline, f, indent=2, sort_keys=True)
             f.write("\n")
-        print(f"updated {args.baseline} from {args.fresh}")
+        which = f"suite {args.suite}" if args.suite else "metrics"
+        print(f"updated {args.baseline} ({which}) from {args.fresh}")
         return
 
-    rows, ok = check(payload, baseline)
+    rows, ok = check(payload, baseline, args.suite)
     width = max(len(r[0]) for r in rows) if rows else 0
     for path, want, got, verdict in rows:
         print(f"  {path:<{width}}  baseline={want!r:<10} fresh={got!r:<10} "

@@ -338,6 +338,147 @@ def shared_prefix_head_to_head(
     }
 
 
+def resident_int4_head_to_head(
+    n_requests: int = 6,
+    max_batch: int = 3,
+    gen: int = 24,
+    seed: int = 0,
+    passes: int = 3,
+    kernel_backend: str = "auto",
+) -> dict:
+    """Resident-INT4 vs fp-resident expert serving (DESIGN.md §5b).
+
+    Three engines serve the same greedy trace through the lockstep loop:
+    the true-fp comparator, an fp engine whose expert weights were
+    round-tripped through the same INT4 quantizer (the documented
+    quantization tolerance, isolated from the serving path), and the
+    resident-INT4 engine (packed pytrees on device, dequant fused into
+    ``grouped_matmul`` per invocation). Gates:
+
+    - ``roundtrip_exact`` — resident-INT4 greedy outputs MUST equal the
+      round-tripped fp engine's token for token: the fused dequant path
+      is numerically the dense path on the same quantized weights, so
+      the only tolerated error is the quantizer's own.
+    - ``residency_improved`` — per-expert residency from the engines'
+      actual leaves: within the fp16/fp32 budget that holds E dense
+      experts, the packed format must hold strictly more
+      (``max_experts_int4`` > ``max_experts_fp``) — the freed capacity
+      is what online replication spends.
+    - ``agreement_vs_fp`` + tok/s ride to the bench-gate baseline
+      (suite ``resident_int4``) with wide tolerances.
+
+    A fourth engine stacks online hot-expert replication on top
+    (``replicate_experts=2``) and must stay token-exact too — replicas
+    only split an expert's token load across slots.
+    """
+    cfg = dataclasses.replace(
+        get_config("deepseek-moe-16b").reduced(), dtype="float32", capacity_factor=8.0
+    )
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    trace = [
+        (rng.integers(1, cfg.vocab_size, int(rng.integers(9, 17))).tolist(), gen)
+        for _ in range(n_requests)
+    ]
+
+    # the documented comparator: fp serving of the SAME quantized weights
+    from repro.core.quantization import (
+        dequantize_int4,
+        pick_group_size,
+        quantize_int4_lastdim,
+    )
+
+    rt = dict(params)
+    layers = dict(rt["layers"])
+    moe = dict(layers["moe"])
+    for name in ("wi_gate", "wi_up", "wo"):
+        w = np.asarray(moe[name], np.float32)
+        gs = pick_group_size(w.shape[-1], 128)
+        moe[name] = jax.numpy.asarray(
+            dequantize_int4(quantize_int4_lastdim(w, gs)), moe[name].dtype
+        )
+    layers["moe"] = moe
+    rt["layers"] = layers
+
+    def make_engine(p, **kw):
+        session = HAPSession(
+            cfg,
+            "a6000",
+            1,
+            source=fixed_plan("TP1", "TP1"),
+            prompt_bucket=16,
+            gen_bucket=8,
+        )
+        return session.engine(
+            p,
+            max_batch=max_batch,
+            kernel_backend=None if kernel_backend == "auto" else kernel_backend,
+            **kw,
+        )
+
+    def timed(eng):
+        def one_pass():
+            for p, g in trace:
+                eng.submit(Request(prompt=p, max_new_tokens=g))
+            t0 = time.perf_counter()
+            comps = eng.run()
+            return comps, time.perf_counter() - t0
+
+        one_pass()  # warm-up (jit compilation)
+        comps, best_dt = one_pass()
+        for _ in range(passes - 1):
+            _, dt = one_pass()
+            best_dt = min(best_dt, dt)
+        toks = [c.tokens for c in comps]
+        return toks, sum(len(t) for t in toks) / best_dt
+
+    toks_fp, tps_fp = timed(make_engine(params))
+    toks_rt, _ = timed(make_engine(rt))
+    eng_q = make_engine(params, resident_int4=True)
+    toks_q, tps_q = timed(eng_q)
+    eng_r = make_engine(
+        params, resident_int4=True, replicate_experts=2, rebalance_interval=8
+    )
+    toks_r, _ = timed(eng_r)
+
+    flat_fp = [t for ts in toks_fp for t in ts]
+    flat_q = [t for ts in toks_q for t in ts]
+    agreement = float(
+        np.mean([a == b for a, b in zip(flat_fp, flat_q)]) if flat_fp else 1.0
+    )
+
+    # residency math from the engines' actual leaves: how many experts fit
+    # the budget that holds E dense experts?
+    moe_q = eng_q.params["layers"]["moe"]
+    n_inst = int(np.prod(np.asarray(params["layers"]["moe"]["wi_gate"].shape[:2])))
+    dense_per_exp = sum(
+        params["layers"]["moe"][n].nbytes for n in ("wi_gate", "wi_up", "wo")
+    ) / n_inst
+    packed_per_exp = sum(moe_q[n].nbytes for n in ("wi_gate", "wi_up", "wo")) / n_inst
+    budget = dense_per_exp * cfg.n_routed_experts
+    max_fp = cfg.n_routed_experts
+    max_int4 = int(budget // packed_per_exp)
+
+    return {
+        "n_requests": n_requests,
+        "kernel_backend": kernel_backend,
+        "gen": gen,
+        "fp_tok_per_s": round(tps_fp, 2),
+        "int4_tok_per_s": round(tps_q, 2),
+        "relative_tok_per_s": round(tps_q / tps_fp, 3),
+        "roundtrip_exact": toks_q == toks_rt,
+        "replicated_exact": toks_r == toks_q,
+        "replication_rebalances": eng_r.stats.replication_rebalances,
+        "agreement_vs_fp": round(agreement, 4),
+        "resident_bytes_saved": eng_q.stats.resident_bytes_saved,
+        "dense_bytes_per_expert": int(dense_per_exp),
+        "packed_bytes_per_expert": int(packed_per_exp),
+        "max_experts_fp": max_fp,
+        "max_experts_int4": max_int4,
+        "residency_improved": max_int4 > max_fp,
+    }
+
+
 def run(csv_rows, h2h=None):
     ok = True
     if h2h is None:
@@ -406,7 +547,43 @@ def main() -> None:
         help="prefix-cache on-vs-off head-to-head on a shared-prompt "
         "trace (DESIGN.md §4d) instead of the scenario sweep",
     )
+    ap.add_argument(
+        "--resident-int4",
+        action="store_true",
+        help="resident-INT4 vs fp-resident expert serving head-to-head "
+        "(DESIGN.md §5b) instead of the scenario sweep",
+    )
     args = ap.parse_args()
+
+    if args.resident_int4:
+        ri = resident_int4_head_to_head(kernel_backend=args.kernel_backend)
+        print(
+            f"fp-resident serving:   {ri['fp_tok_per_s']:.1f} tok/s "
+            f"({ri['dense_bytes_per_expert']} B/expert, "
+            f"{ri['max_experts_fp']} experts in budget)"
+        )
+        print(
+            f"INT4-resident serving: {ri['int4_tok_per_s']:.1f} tok/s "
+            f"({ri['packed_bytes_per_expert']} B/expert, "
+            f"{ri['max_experts_int4']} experts in budget; "
+            f"{ri['resident_bytes_saved']} B residency freed)"
+        )
+        print(
+            f"roundtrip exact: {ri['roundtrip_exact']}  "
+            f"replicated exact: {ri['replicated_exact']} "
+            f"({ri['replication_rebalances']} rebalances)  "
+            f"agreement vs fp: {ri['agreement_vs_fp']:.3f}"
+        )
+        write_bench_json(args.out, {"resident_int4": ri})
+        print(f"wrote {args.out}")
+        # hard gates: quantization-tolerance exactness and the residency
+        # win are deterministic; tok/s noise is the bench-gate's job
+        if not (
+            ri["roundtrip_exact"] and ri["replicated_exact"] and
+            ri["residency_improved"]
+        ):
+            sys.exit(1)
+        return
 
     if args.shared_prefix:
         sp = shared_prefix_head_to_head(kernel_backend=args.kernel_backend)

@@ -168,3 +168,36 @@ class OneHotIlp:
         if best[0] is None:
             raise ValueError("infeasible")
         return sorted(best[0]), best[1]
+
+
+def replication_degrees(freqs: Sequence[float], extra_replicas: int,
+                        max_degree: Optional[int] = None) -> Tuple[int, ...]:
+    """Water-filling replica assignment for hot-expert replication.
+
+    Greedy: every expert starts at one replica; each of the
+    ``extra_replicas`` grants goes to the expert with the highest
+    per-replica load ``f_e / r_e``. For the minimize-the-max-load
+    objective the greedy exchange argument makes this exact (each grant
+    is the unique step that lowers the current maximum the most), so no
+    ILP extension is needed — the planner treats replication as a
+    post-pass on the selected expert strategy.
+
+    Ties break toward the lower expert id, keeping the plan
+    deterministic under identical frequency snapshots.
+    """
+    f = np.maximum(np.asarray(freqs, np.float64), 0.0)
+    n = f.size
+    if n == 0:
+        return ()
+    if f.sum() <= 0:
+        f = np.ones(n)
+    degrees = np.ones(n, dtype=np.int64)
+    for _ in range(max(int(extra_replicas), 0)):
+        load = f / degrees
+        if max_degree is not None:
+            load[degrees >= max_degree] = -1.0
+        e = int(np.argmax(load))
+        if load[e] < 0:
+            break
+        degrees[e] += 1
+    return tuple(int(d) for d in degrees)

@@ -210,16 +210,54 @@ class InferenceSimulator:
              else (self.cfg.d_ff or self.cfg.d_model))
         return min(self.cfg.d_model, f / e.tp)
 
-    def expert_time(self, w: Workload, phase: str,
-                    e: ExpertStrategy) -> float:
+    def expert_time(self, w: Workload, phase: str, e: ExpertStrategy,
+                    resident_int4: bool = False,
+                    replication=None) -> float:
+        """Per-layer expert-module time under strategy ``e``.
+
+        ``resident_int4`` models INT4-resident serving: weight reads
+        shrink to INT4_BYTES_PER_PARAM per param but every invocation
+        pays the fused dequant of the weights it touches (HBM-bound:
+        nibble read + fp write — ``GroundTruth.dequant_time``).
+
+        ``replication`` (an ``ExpertReplication`` or per-expert degree
+        sequence) models hot-expert replication under EP: the busiest
+        device's load drops from max_e f_e to max_e f_e/r_e, which
+        scales the imbalance-inflated compute term down by that ratio.
+        """
         f = flops_mod.expert_flops_dev(self.cfg, w, phase, e)
         if f <= 0:
             return 0.0
+        f *= self._replication_factor(e, replication)
         by = flops_mod.expert_bytes(self.cfg, w, phase, e)
+        dequant = 0.0
+        if resident_int4 and self.cfg.is_moe:
+            from .transition import INT4_BYTES_PER_PARAM
+            wb = flops_mod.expert_weight_bytes(self.cfg, w.dtype_bytes) \
+                / (e.tp * e.ep)
+            w_params = wb / w.dtype_bytes
+            by = max(by - wb * (1 - INT4_BYTES_PER_PARAM / w.dtype_bytes),
+                     0.0)
+            dequant = self.gt.dequant_time(w_params)
         t = self.model.predict_compute(
             [f], [by], [w.tokens(phase) / max(self.n // (e.tp * e.ep), 1)],
             [w.ctx(phase)], [self.cfg.d_model], [self._expert_min_dim(e)])
-        return float(t[0])
+        return float(t[0]) + dequant
+
+    def _replication_factor(self, e: ExpertStrategy, replication) -> float:
+        """Hot-load reduction from replica degrees, in [1/max_deg, 1]."""
+        if replication is None or e.ep <= 1 or not self.cfg.is_moe:
+            return 1.0
+        degrees = getattr(replication, "degrees", replication)
+        degrees = [max(int(d), 1) for d in degrees]
+        if not degrees or all(d == 1 for d in degrees):
+            return 1.0
+        # Ideal water-filled case (the planner grants replicas to the
+        # actually-hot experts until per-replica loads equalize): the
+        # busiest slot's load drops by the slot-count ratio. A lower
+        # bound on the real skew, but monotone in the replica budget —
+        # which is what the ILP's relative comparisons need.
+        return len(degrees) / float(sum(degrees))
 
     def comm_time(self, w: Workload, phase: str, a: AttnStrategy,
                   e: ExpertStrategy) -> float:

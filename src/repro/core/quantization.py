@@ -63,11 +63,59 @@ def quantize_int4(w: np.ndarray, scheme: str = "per_group",
 
 
 def dequantize_int4(qt: QuantizedTensor, dtype=np.float32) -> np.ndarray:
-    low = (qt.packed & 0xF).astype(np.float32)
-    high = (qt.packed >> 4).astype(np.float32)
-    vals = np.stack([low, high], axis=-1).reshape(qt.packed.shape[0], -1)
-    out = vals * qt.scales + qt.zeros
+    packed = qt.packed.reshape(-1, qt.packed.shape[-1])
+    low = (packed & 0xF).astype(np.float32)
+    high = (packed >> 4).astype(np.float32)
+    vals = np.stack([low, high], axis=-1).reshape(packed.shape[0], -1)
+    out = vals * qt.scales.reshape(-1, 1) + qt.zeros.reshape(-1, 1)
     return out.reshape(qt.shape).astype(dtype)
+
+
+def pick_group_size(last_dim: int, preferred: int = 128) -> int:
+    """Largest even divisor of ``last_dim`` not exceeding ``preferred``.
+
+    Residency quantizes along the last weight dim, so every group must
+    fit inside one last-dim row for group spans to align with the
+    matmul's contraction/output layout (and with how sharded plans
+    split that dim).
+    """
+    if last_dim % 2:
+        raise ValueError(f"last dim {last_dim} must be even for packing")
+    gs = min(preferred, last_dim)
+    while gs > 2 and (last_dim % gs or gs % 2):
+        gs -= 1
+    if last_dim % gs or gs % 2:
+        raise ValueError(f"no even divisor of {last_dim} under {preferred}")
+    return gs
+
+
+def quantize_int4_lastdim(w: np.ndarray,
+                          group_size: int | None = None) -> QuantizedTensor:
+    """Structured per-group quantization with groups tiling the LAST dim.
+
+    Unlike the flat ``per_group`` layout above (one long (G, gs/2) slab
+    for the transition wire format), the leaves here keep the leading
+    weight dims so the result can live *resident* on device:
+
+        packed (*lead, n_groups, gs // 2) uint8
+        scales (*lead, n_groups, 1) float32
+        zeros  (*lead, n_groups, 1) float32
+
+    With ``gs`` dividing the last dim, row-major flat grouping lands
+    every group inside one last-dim span, so this is numerically the
+    same quantization as ``quantize_int4(w, "per_group", gs)`` — only
+    the array layout differs.
+    """
+    w = np.asarray(w, np.float32)
+    gs = pick_group_size(w.shape[-1], group_size or 128)
+    qt = quantize_int4(w, "per_group", gs)
+    lead = w.shape[:-1]
+    n_groups = w.shape[-1] // gs
+    return QuantizedTensor(
+        packed=qt.packed.reshape(*lead, n_groups, gs // 2),
+        scales=qt.scales.reshape(*lead, n_groups, 1),
+        zeros=qt.zeros.reshape(*lead, n_groups, 1),
+        shape=tuple(w.shape), group_size=gs)
 
 
 def cosine_similarity(a: np.ndarray, b: np.ndarray) -> float:

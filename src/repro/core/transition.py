@@ -118,6 +118,14 @@ class TransitionExecutor:
         self._backups[name] = self._q.quantize_int4(
             np.asarray(w, np.float32), "per_group", self.group_size)
 
+    def backup_packed(self, name: str, w, group_size=None) -> None:
+        """Backup in the *structured* last-dim-grouped layout — the one
+        resident-INT4 serving consumes directly (``restore_packed``),
+        with no dequant on either side of the transition."""
+        import numpy as np
+        self._backups[name] = self._q.quantize_int4_lastdim(
+            np.asarray(w, np.float32), group_size or self.group_size)
+
     def restore(self, name: str, sharding=None, dtype=None):
         import jax
         import jax.numpy as jnp
@@ -127,6 +135,30 @@ class TransitionExecutor:
         if sharding is not None:
             arr = jax.device_put(arr, sharding)
         return arr
+
+    def restore_packed(self, name: str, sharding=None):
+        """Materialize a structured backup as a resident
+        ``QuantizedExpert`` pytree — upload the packed nibbles and the
+        per-group scales/zeros, never the dense weight. ``sharding``
+        (the packed-layout spec from ``specs.quantized_pspec``) applies
+        per leaf; scales/zeros share the spec by equal rank."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import QuantizedExpert
+
+        qt = self._backups[name]
+        if qt.packed.ndim < 3:
+            raise ValueError(
+                f"backup {name!r} is flat; use backup_packed for residency")
+
+        def put(a):
+            arr = jnp.asarray(a)
+            return jax.device_put(arr, sharding) if sharding is not None \
+                else arr
+
+        return QuantizedExpert(packed=put(qt.packed), scales=put(qt.scales),
+                               zeros=put(qt.zeros))
 
     @staticmethod
     def reshard(w, sharding):

@@ -43,6 +43,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+import math
 import os
 from typing import Callable, Optional, Tuple, Union
 
@@ -513,21 +514,105 @@ jax.tree_util.register_pytree_node(
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class QuantizedExpert:
+    """Resident INT4 expert weight — a *structured* quantized pytree.
+
+    Same nibble packing as ``QuantizedWeight``, but the groups tile the
+    LAST weight dim and the leading dims stay explicit:
+
+        packed (*lead, n_groups, gs // 2) uint8
+        scales (*lead, n_groups, 1) float32
+        zeros  (*lead, n_groups, 1) float32
+
+    Crucially there is NO static ``shape`` aux: the unpacked shape is
+    derived from the leaves, so the pytree survives every structural
+    transform the serving path applies to dense weights — ``lax.scan``
+    slicing a stacked (L, ...) leading axis, shard_map handing each
+    device its slice, leading-axis gathers for expert replication, and
+    per-leaf ``device_put`` resharding.
+    """
+
+    packed: jax.Array
+    scales: jax.Array
+    zeros: jax.Array
+
+    @property
+    def group_size(self) -> int:
+        return 2 * self.packed.shape[-1]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        lead = tuple(self.packed.shape[:-2])
+        return lead + (self.packed.shape[-2] * self.group_size,)
+
+    @property
+    def ndim(self) -> int:
+        return self.packed.ndim - 1
+
+    @property
+    def nbytes(self) -> int:
+        return self.packed.nbytes + self.scales.nbytes + self.zeros.nbytes
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedExpert,
+    lambda qe: ((qe.packed, qe.scales, qe.zeros), None),
+    lambda _, leaves: QuantizedExpert(*leaves),
+)
+
+
+def quantize_weight(w, group_size: Optional[int] = None) -> QuantizedExpert:
+    """Host-quantize a dense weight into a resident ``QuantizedExpert``.
+
+    Groups tile the last dim (size picked by
+    ``quantization.pick_group_size`` when not given), so sharded plans
+    that split the last dim keep whole groups per shard.
+    """
+    import numpy as np
+
+    from repro.core.quantization import quantize_int4_lastdim
+
+    qt = quantize_int4_lastdim(np.asarray(w, np.float32), group_size)
+    return QuantizedExpert(
+        packed=jnp.asarray(qt.packed),
+        scales=jnp.asarray(qt.scales),
+        zeros=jnp.asarray(qt.zeros),
+    )
+
+
 def _dequant_weight(rhs, be: KernelBackend, out_dtype) -> jax.Array:
-    """Materialize a ``QuantizedWeight`` (dense arrays pass through)."""
-    if not isinstance(rhs, QuantizedWeight):
+    """Materialize a quantized rhs (dense arrays pass through).
+
+    Handles both the flat transition format (``QuantizedWeight``) and
+    the structured resident format (``QuantizedExpert``): the structured
+    leaves flatten to the (G, gs/2) slab the dequant kernel consumes,
+    then reshape to the derived unpacked shape — so the SAME call works
+    on a global weight and on a shard_map-local slice of one.
+    """
+    if isinstance(rhs, QuantizedExpert):
+        half = rhs.packed.shape[-1]
+        packed = rhs.packed.reshape(-1, half)
+        scales = rhs.scales.reshape(-1, 1)
+        zeros = rhs.zeros.reshape(-1, 1)
+        shape = rhs.shape
+    elif isinstance(rhs, QuantizedWeight):
+        packed, scales, zeros, shape = rhs.packed, rhs.scales, rhs.zeros, rhs.shape
+    else:
         return rhs
     if be is KernelBackend.PALLAS:
+        g = packed.shape[0]
         w = _dequant_pallas(
-            rhs.packed,
-            rhs.scales,
-            rhs.zeros,
+            packed,
+            scales,
+            zeros,
             out_dtype=out_dtype,
+            bg=math.gcd(g, 256),
             interpret=interpret_mode(),
         )
     else:
-        w = ref.int4_dequant_ref(rhs.packed, rhs.scales, rhs.zeros, out_dtype=out_dtype)
-    return w.reshape(rhs.shape)
+        w = ref.int4_dequant_ref(packed, scales, zeros, out_dtype=out_dtype)
+    return w.reshape(shape)
 
 
 def grouped_matmul(
@@ -540,10 +625,12 @@ def grouped_matmul(
 ) -> jax.Array:
     """(E, C, d) x (E, d, f) -> (E, C, f) — the expert-FFN seam.
 
-    ``rhs`` may be a dense array or a ``QuantizedWeight`` (INT4 per-group
-    packed), dequantized through the backend's dequant path before the
-    matmul — the Table-I transition round-trip serves straight from the
-    packed nibbles.
+    ``rhs`` may be a dense array, a flat ``QuantizedWeight`` (the INT4
+    transition wire format) or a structured ``QuantizedExpert`` (the
+    resident serving format), dequantized through the backend's dequant
+    path per invocation — resident INT4 serves straight from the packed
+    nibbles, and under a TP plan the dequant runs INSIDE the shard_map
+    on each device's own slice.
 
     ``shard_axes`` (a TP plan's ``expert_kernel_axes``) runs the Pallas
     kernel per d_ff shard under shard_map, Megatron-style:
@@ -562,25 +649,45 @@ def grouped_matmul(
     if be is not KernelBackend.PALLAS:
         _record("gmm.ref")
         return ref.grouped_matmul_ref(lhs, _dequant_weight(rhs, be, out_dtype))
-    w = _dequant_weight(rhs, be, out_dtype)
     if shard_axes is None:
+        w = _dequant_weight(rhs, be, out_dtype)
         _record("gmm.pallas")
         return _gmm_pallas(lhs, w, interpret=interpret_mode())
-    _record("gmm.pallas_shard_map")
     ax = shard_axes.axis
+    n_shards = shard_axes.mesh.shape[ax]
+    # Resident-INT4: keep the rhs packed THROUGH the shard_map and fuse
+    # the dequant into each device's local kernel call, so only the
+    # device's own nibble slice is ever materialized. Column-parallel
+    # ("out") shards the group axis of the packed layout (groups tile
+    # the last dim, so group spans == last-dim spans); row-parallel
+    # ("in") shards the leading contraction dim, which every group
+    # leaves intact. Falls back to a global dequant when the group axis
+    # doesn't divide the mesh axis.
+    fused = isinstance(rhs, QuantizedExpert) and (
+        rhs.packed.shape[-2] % n_shards == 0
+        if sharded_dim == "out"
+        else rhs.packed.shape[1] % n_shards == 0
+    )
+    if not fused:
+        rhs = _dequant_weight(rhs, be, out_dtype)
+    _record("gmm.pallas_shard_map_int4" if fused else "gmm.pallas_shard_map")
     if sharded_dim == "out":
-        in_specs = (P(None, None, None), P(None, None, ax))
+        rhs_spec = P(None, None, ax, None) if fused else P(None, None, ax)
+        in_specs = (P(None, None, None), rhs_spec)
         out_specs = P(None, None, ax)
 
         def local(loc_l, loc_r):
-            return _gmm_pallas(loc_l, loc_r, interpret=interpret_mode())
+            loc_w = _dequant_weight(loc_r, be, out_dtype)
+            return _gmm_pallas(loc_l, loc_w, interpret=interpret_mode())
 
     elif sharded_dim == "in":
-        in_specs = (P(None, None, ax), P(None, ax, None))
+        rhs_spec = P(None, ax, None, None) if fused else P(None, ax, None)
+        in_specs = (P(None, None, ax), rhs_spec)
         out_specs = P(None, None, None)
 
         def local(loc_l, loc_r):
-            part = _gmm_pallas(loc_l, loc_r, interpret=interpret_mode())
+            loc_w = _dequant_weight(loc_r, be, out_dtype)
+            part = _gmm_pallas(loc_l, loc_w, interpret=interpret_mode())
             return jax.lax.psum(part, ax)
 
     else:
@@ -592,7 +699,7 @@ def grouped_matmul(
         out_specs=out_specs,
         **_SHARD_MAP_KW,
     )
-    return fn(lhs, w)
+    return fn(lhs, rhs)
 
 
 def int4_dequant(

@@ -82,6 +82,18 @@ def main() -> None:
                          "attention and grouped expert matmuls (auto "
                          "resolves per platform: Pallas on TPU, jnp ref "
                          "elsewhere)")
+    ap.add_argument("--resident-int4", action="store_true",
+                    help="serve the expert FFN weights as resident INT4 "
+                         "pytrees (packed nibbles + per-group scales stay "
+                         "on device; dequant fuses into grouped_matmul — "
+                         "DESIGN.md §5b)")
+    ap.add_argument("--replicate-experts", type=int, default=0,
+                    help="extra hot-expert replica budget for online "
+                         "replication (0 = off); replicas are granted by "
+                         "routing frequency and rebalanced through the "
+                         "Eq.-6 transition path")
+    ap.add_argument("--rebalance-interval", type=int, default=32,
+                    help="decode steps between replication re-plans")
     args = ap.parse_args()
     logging.basicConfig(
         level=logging.INFO, format="%(name)s: %(message)s")
@@ -123,6 +135,9 @@ def main() -> None:
                             kv_block_size=args.kv_block_size,
                             prefill_chunk=args.prefill_chunk or None,
                             prefix_cache=args.prefix_cache,
+                            resident_int4=args.resident_int4,
+                            replicate_experts=args.replicate_experts,
+                            rebalance_interval=args.rebalance_interval,
                             kernel_backend=None if args.kernel_backend == "auto"
                             else args.kernel_backend)
     rng = np.random.default_rng(0)
@@ -152,6 +167,14 @@ def main() -> None:
     print(f"plan changes: {st.replans} (strategy switches "
           f"{st.plan_switches}, cache hits {st.cache_hits}), "
           f"transition total {st.transition_ms_total:.1f} ms")
+    if args.resident_int4:
+        print(f"resident INT4 experts: "
+              f"{st.resident_bytes_saved / 2**20:.2f} MiB residency freed")
+    if args.replicate_experts:
+        rep = engine._replication
+        print(f"expert replication: {st.replication_rebalances} rebalances "
+              f"over {st.routing_steps} tracked steps, degrees "
+              f"{rep.degrees if rep is not None else 'uniform'}")
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ gather) to avoid materializing a (T*k, d) replica of the activations.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
 from repro.sharding.specs import SHARD_MAP_KW as _SHARD_MAP_KW
+from repro.sharding.specs import ExpertReplication  # noqa: F401 (re-export)
 from repro.sharding.specs import shard_map as _shard_map
 from .common import activation_fn, glu_ffn
 
@@ -37,6 +38,9 @@ from .common import activation_fn, glu_ffn
 class MoEOut(NamedTuple):
     y: jax.Array          # (B, S, d)
     aux_loss: jax.Array   # scalar load-balance loss
+    # router's top-k expert ids, (B*S, top_k) int32 — the engine's
+    # routing-frequency tracker feeds on these (hot-expert replication)
+    route_idx: Optional[jax.Array] = None
 
 
 def capacity(num_tokens: int, cfg: ModelConfig) -> int:
@@ -98,6 +102,41 @@ def combine(y_buf, flat_expert, pos_in_expert, keep, flat_gates, T: int):
     return jnp.sum(gathered.reshape(T, k, -1), axis=1)
 
 
+def replica_coords(flat_expert, pos_in_expert, rep: ExpertReplication):
+    """(expert id, pos within expert) -> (slot id, pos within replica).
+
+    Token copy ``p`` of expert ``e`` lands on replica ``p % degree(e)``
+    inside the expert's contiguous slot block — the deterministic
+    round-robin "least-loaded" choice (replica loads differ by at most
+    one token), implemented as two table lookups so it stays a cheap
+    gather inside the jit.
+    """
+    degrees = jnp.asarray(rep.degrees, jnp.int32)
+    offsets = jnp.asarray(rep.expert_offsets(), jnp.int32)
+    deg = degrees[flat_expert]
+    slot = offsets[flat_expert] + pos_in_expert % deg
+    return slot, pos_in_expert // deg
+
+
+def slot_weights(w, rep: ExpertReplication):
+    """Gather per-slot expert weights: leading dim E -> total_slots.
+
+    Works on dense (E, ...) arrays and on resident ``QuantizedExpert``
+    pytrees alike (every leaf shares the leading expert dim). The
+    gather happens in-jit, so replicas never exist as separate host
+    copies — a replica-set change is just a new index table.
+    """
+    sl = jnp.asarray(rep.slot_to_expert(), jnp.int32)
+    return jax.tree_util.tree_map(lambda a: a[sl], w)
+
+
+def _active_replication(plan) -> Optional[ExpertReplication]:
+    rep = getattr(plan, "replication", None) if plan is not None else None
+    if rep is None or rep.is_identity:
+        return None
+    return rep
+
+
 def expert_ffn(buf: jax.Array, wi_gate: jax.Array, wi_up: jax.Array,
                wo: jax.Array, act_name: str, *, plan=None,
                backend=None) -> jax.Array:
@@ -127,17 +166,22 @@ def expert_ffn(buf: jax.Array, wi_gate: jax.Array, wi_up: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-def _moe_local(x_flat, moe_p, cfg: ModelConfig, backend=None):
+def _moe_local(x_flat, moe_p, cfg: ModelConfig, backend=None, rep=None):
     T = x_flat.shape[0]
     E = cfg.n_routed_experts
     C = capacity(T, cfg)
     gates, idx, aux = route(x_flat, moe_p["router"], cfg)
     fe, pe, keep, fg = make_dispatch(idx, gates, E, C)
+    wig, wiu, wo = moe_p["wi_gate"], moe_p["wi_up"], moe_p["wo"]
+    if rep is not None:
+        fe, pe = replica_coords(fe, pe, rep)
+        keep = pe < C  # per-SLOT capacity: hot experts hold degree*C
+        E = rep.total_slots
+        wig, wiu, wo = (slot_weights(w, rep) for w in (wig, wiu, wo))
     buf, _ = dispatch(x_flat, fe, pe, E, C)
-    y_buf = expert_ffn(buf, moe_p["wi_gate"], moe_p["wi_up"],
-                       moe_p["wo"], cfg.activation, backend=backend)
+    y_buf = expert_ffn(buf, wig, wiu, wo, cfg.activation, backend=backend)
     y = combine(y_buf, fe, pe, keep, fg, T)
-    return y, aux
+    return y, aux, idx
 
 
 def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan, backend=None):
@@ -167,34 +211,55 @@ def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan, backend=None):
         tok_axes = ()
     dp_spec = P(tok_axes or None, None)
 
+    # Hot-expert replication: gather the per-slot weight view in-jit
+    # (dense or QuantizedExpert leaves alike) and shard the SLOT axis
+    # over EP — hot experts then own replica slots on several devices,
+    # and the affinity-ordered slot layout keeps co-firing experts in
+    # the same shard. Needs total_slots % ep == 0; otherwise serve
+    # unreplicated (a planner with `align=ep` never hits the fallback).
+    rep = _active_replication(plan)
+    if rep is not None and rep.total_slots % ep_size:
+        rep = None
+    n_slots = rep.total_slots if rep is not None else E
+    wig, wiu, wo = moe_p["wi_gate"], moe_p["wi_up"], moe_p["wo"]
+    if rep is not None:
+        wig, wiu, wo = (slot_weights(w, rep) for w in (wig, wiu, wo))
+
+    def w_spec(w):
+        n = w.packed.ndim if isinstance(w, kernel_ops.QuantizedExpert) \
+            else w.ndim
+        return P(ep_ax, *([None] * (n - 1)))
+
     def local_fn(xl, router_w, wig_l, wiu_l, wo_l):
         # xl: (T_loc, d) — this device's dispatch shard.
         T_loc = xl.shape[0]
         C_loc = capacity(T_loc, cfg)
         gates, idx, aux = route(xl, router_w, cfg)
         fe, pe, keep, fg = make_dispatch(idx, gates, E, C_loc)
-        buf, _ = dispatch(xl, fe, pe, E, C_loc)             # (E, C_loc, d)
-        # exchange: every device sends E/ep expert-slabs to each peer
+        if rep is not None:
+            fe, pe = replica_coords(fe, pe, rep)
+            keep = pe < C_loc
+        buf, _ = dispatch(xl, fe, pe, n_slots, C_loc)     # (S, C_loc, d)
+        # exchange: every device sends S/ep slot-slabs to each peer
         buf = jax.lax.all_to_all(buf, ep_ax, split_axis=0, concat_axis=1,
-                                 tiled=True)                # (E/ep, C_loc*ep, d)
+                                 tiled=True)              # (S/ep, C_loc*ep, d)
         # already inside the EP shard_map: slabs are device-local, so the
         # grouped kernel runs directly on them (plan=None at the seam)
         y_buf = expert_ffn(buf, wig_l, wiu_l, wo_l, cfg.activation,
                            backend=backend)
         y_buf = jax.lax.all_to_all(y_buf, ep_ax, split_axis=1, concat_axis=0,
-                                   tiled=True)              # (E, C_loc, d)
+                                   tiled=True)            # (S, C_loc, d)
         y = combine(y_buf, fe, pe, keep, fg, T_loc)
-        return y, jax.lax.pmean(aux, ep_ax)
+        return y, jax.lax.pmean(aux, ep_ax), idx
 
     fn = _shard_map(
         local_fn, mesh=mesh,
-        in_specs=(dp_spec, P(None, None), P(ep_ax, None, None),
-                  P(ep_ax, None, None), P(ep_ax, None, None)),
-        out_specs=(dp_spec, P()),
+        in_specs=(dp_spec, P(None, None), w_spec(wig), w_spec(wiu),
+                  w_spec(wo)),
+        out_specs=(dp_spec, P(), P(tok_axes or None, None)),
         **_SHARD_MAP_KW)
-    y, aux = fn(x_flat, moe_p["router"], moe_p["wi_gate"],
-                moe_p["wi_up"], moe_p["wo"])
-    return y, jnp.mean(aux)
+    y, aux, idx = fn(x_flat, moe_p["router"], wig, wiu, wo)
+    return y, jnp.mean(aux), idx
 
 
 def _moe_tp(x_flat, moe_p, cfg: ModelConfig, plan, backend=None):
@@ -206,14 +271,20 @@ def _moe_tp(x_flat, moe_p, cfg: ModelConfig, plan, backend=None):
     C = capacity(T, cfg)
     gates, idx, aux = route(x_flat, moe_p["router"], cfg)
     fe, pe, keep, fg = make_dispatch(idx, gates, E, C)
+    wig, wiu, wo = moe_p["wi_gate"], moe_p["wi_up"], moe_p["wo"]
+    rep = _active_replication(plan)
+    if rep is not None:
+        fe, pe = replica_coords(fe, pe, rep)
+        keep = pe < C
+        E = rep.total_slots
+        wig, wiu, wo = (slot_weights(w, rep) for w in (wig, wiu, wo))
     buf, _ = dispatch(x_flat, fe, pe, E, C)
     buf = plan.constrain(buf, P(None, plan.dp, None))
-    y_buf = expert_ffn(buf, moe_p["wi_gate"], moe_p["wi_up"],
-                       moe_p["wo"], cfg.activation, plan=plan,
+    y_buf = expert_ffn(buf, wig, wiu, wo, cfg.activation, plan=plan,
                        backend=backend)
     y_buf = plan.constrain(y_buf, P(None, plan.dp, None))
     y = combine(y_buf, fe, pe, keep, fg, T)
-    return y, aux
+    return y, aux, idx
 
 
 def apply_moe(x: jax.Array, moe_p: Dict[str, Any], cfg: ModelConfig,
@@ -223,20 +294,28 @@ def apply_moe(x: jax.Array, moe_p: Dict[str, Any], cfg: ModelConfig,
     ``backend`` selects the grouped-matmul kernel path for the expert
     FFNs (DESIGN.md §4c) — threaded from the engine like the attention
     backend, so decode-time expert compute joins the kernel seam.
+
+    When the plan carries an ``ExpertReplication``, token copies are
+    routed to replica slots (round-robin over each expert's replicas)
+    — token-identical to unreplicated serving whenever capacity drops
+    don't bind, since gates never change and replicas share weights.
     """
     B, S, d = x.shape
     x_flat = x.reshape(B * S, d)
 
     if plan is None or plan.is_null:
-        y, aux = _moe_local(x_flat, moe_p, cfg, backend=backend)
+        y, aux, idx = _moe_local(x_flat, moe_p, cfg, backend=backend,
+                                 rep=_active_replication(plan))
     elif plan.ffn_mode == "ep" and plan.ep_axis is not None:
-        y, aux = _moe_ep_shardmap(x_flat, moe_p, cfg, plan, backend=backend)
+        y, aux, idx = _moe_ep_shardmap(x_flat, moe_p, cfg, plan,
+                                       backend=backend)
     else:
-        y, aux = _moe_tp(x_flat, moe_p, cfg, plan, backend=backend)
+        y, aux, idx = _moe_tp(x_flat, moe_p, cfg, plan, backend=backend)
 
     if cfg.n_shared_experts:
         y_shared = glu_ffn(x_flat, moe_p["shared_wi_gate"],
                            moe_p["shared_wi_up"], moe_p["shared_wo"],
                            cfg.activation)
         y = y + y_shared
-    return MoEOut(y.reshape(B, S, d), aux * cfg.router_aux_loss_coef)
+    return MoEOut(y.reshape(B, S, d), aux * cfg.router_aux_loss_coef,
+                  idx)

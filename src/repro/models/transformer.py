@@ -64,6 +64,12 @@ class DecodeCache(NamedTuple):
     #                            row 0 = each row's group representative,
     #                            row 1 = shared leading block count; None
     #                            disables the prefix-aware kernel path
+    route_topk: Optional[jax.Array] = None  # (L, B*C, top_k) int32 router
+    #                            top-k ids of the step just taken, present
+    #                            only when decode_step ran with
+    #                            collect_routing=True — the engine's
+    #                            hot-expert replication tracker reads it
+    #                            and strips it before the next step
 
 
 # ---------------------------------------------------------------------------
@@ -153,10 +159,15 @@ def _mixer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool,
 
 
 def _ffn_full(x, lp, cfg: ModelConfig, plan, backend=None):
-    """FFN / MoE sublayer. Returns (out, aux_loss)."""
+    """FFN / MoE sublayer. Returns (out, aux_loss, route_idx).
+
+    ``route_idx`` is the router's top-k ids ((B*S, k) int32, MoE only,
+    None otherwise) — the decode body threads it out through the layer
+    scan for the engine's routing-frequency tracker."""
     if cfg.ffn_type == "none":
-        return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+        return jnp.zeros_like(x), jnp.zeros((), jnp.float32), None
     h = _sp_gather(rms_norm(x, lp["ln2"], cfg.norm_eps), plan)
+    route_idx = None
     if cfg.ffn_type == "dense":
         if cfg.activation in ("silu", "gelu"):
             out = glu_ffn(h, lp["ffn"]["wi_gate"], lp["ffn"]["wi_up"],
@@ -167,10 +178,10 @@ def _ffn_full(x, lp, cfg: ModelConfig, plan, backend=None):
         aux = jnp.zeros((), jnp.float32)
     else:
         res = moe_mod.apply_moe(h, lp["moe"], cfg, plan, backend=backend)
-        out, aux = res.y, res.aux_loss
+        out, aux, route_idx = res.y, res.aux_loss, res.route_idx
     if cfg.use_post_norm:
         out = rms_norm(out, lp["ln2_post"], cfg.norm_eps)
-    return out, aux
+    return out, aux, route_idx
 
 
 def layer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool = False,
@@ -179,7 +190,7 @@ def layer_full(x, lp, flag, cfg: ModelConfig, plan, collect_kv: bool = False,
     x = x + mixed
     if plan is not None and not plan.is_null:
         x = plan.constrain(x, plan.act_btd())
-    ffn_out, aux = _ffn_full(x, lp, cfg, plan, backend)
+    ffn_out, aux, _ = _ffn_full(x, lp, cfg, plan, backend)
     x = x + ffn_out
     if plan is not None and not plan.is_null:
         x = plan.constrain(x, plan.act_btd())
@@ -350,7 +361,7 @@ def make_prefill_body(cfg: ModelConfig, plan, backend=None):
             h = h + out
             ys["conv"] = m_state[0]
             ys["ssm"] = m_state[1]
-            ffn_out, aux = _ffn_full(h, lp, cfg, plan, backend)
+            ffn_out, aux, _ = _ffn_full(h, lp, cfg, plan, backend)
             h = h + ffn_out
         else:
             h, kv, aux = layer_full(h, lp, flag, cfg, plan,
@@ -480,7 +491,8 @@ def merge_cache_rows(cache: DecodeCache, sub: DecodeCache,
 
 
 def decode_step(params, cfg: ModelConfig, token: jax.Array,
-                cache: DecodeCache, plan=None, backend=None
+                cache: DecodeCache, plan=None, backend=None,
+                collect_routing: bool = False
                 ) -> Tuple[jax.Array, DecodeCache]:
     """One cache-appending step: a decode token or a prefill chunk.
 
@@ -497,6 +509,12 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
     ``backend`` selects the attention kernel backend ("ref" | "pallas" |
     None for auto) — threaded into every layer's ``decode_attention``
     dispatch (DESIGN.md §Kernel backends).
+
+    ``collect_routing`` (MoE only) stacks every layer's router top-k
+    ids through the scan and returns them on ``new_cache.route_topk``
+    ((L, B*C, k) int32) for the engine's hot-expert replication
+    tracker; the field is an OUTPUT only — the incoming cache's value
+    is ignored and callers strip it before feeding the cache back in.
     """
     assert cfg.causal
     C = token.shape[1]
@@ -516,20 +534,25 @@ def decode_step(params, cfg: ModelConfig, token: jax.Array,
         xs["conv"] = cache.conv
         xs["ssm"] = cache.ssm
 
+    collect_routing = collect_routing and cfg.ffn_type == "moe"
     body = make_decode_body(cfg, plan, pos, cache.block_tables, backend,
-                            prefix_groups=cache.prefix_groups)
+                            prefix_groups=cache.prefix_groups,
+                            collect_routing=collect_routing)
     h, ys = _scan(body, x, xs)
-    new_cache = cache._replace(pos=pos + C)
+    new_cache = cache._replace(pos=pos + C, route_topk=None)
     if cfg.has_attention:
         new_cache = new_cache._replace(k=ys["k"], v=ys["v"])
     if cfg.has_mamba:
         new_cache = new_cache._replace(conv=ys["conv"], ssm=ys["ssm"])
+    if collect_routing:
+        new_cache = new_cache._replace(route_topk=ys["route"])
     logits = unembed(params, cfg, h[:, -1:, :])
     return logits[:, 0], new_cache
 
 
 def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None,
-                     backend=None, prefix_groups=None):
+                     backend=None, prefix_groups=None,
+                     collect_routing: bool = False):
     """The decode layer-scan body (exposed for the dry-run cost probe).
 
     ``block_tables`` (shared by every layer — one logical layout per
@@ -571,8 +594,10 @@ def make_decode_body(cfg: ModelConfig, plan, pos, block_tables=None,
             out = rms_norm(out, lp["ln1_post"], cfg.norm_eps)
         h = h + out
         # decode-time expert compute rides the same seam (grouped matmul)
-        ffn_out, _aux = _ffn_full(h, lp, cfg, plan, backend)
+        ffn_out, _aux, route_idx = _ffn_full(h, lp, cfg, plan, backend)
         h = h + ffn_out
+        if collect_routing and route_idx is not None:
+            ys["route"] = route_idx
         return h, ys
 
     return body

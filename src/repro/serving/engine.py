@@ -80,8 +80,10 @@ from repro.models import (
     merge_cache_rows,
     prefill,
 )
+from repro.sharding.specs import NULL_PLAN, ExpertReplication, quantized_pspec
 from .kv_cache import TRASH_BLOCK, BlockAllocator, BlockTable, blocks_for
 from .prefix_cache import PrefixCache
+from .replication import RoutingTracker, plan_replication, replication_summary
 from .sampling import SamplingParams, sample
 from .scheduler import ContinuousScheduler, QueuedRequest
 
@@ -128,6 +130,10 @@ class EngineStats:
     cow_copies: int = 0  # shared blocks forked at first write
     raw_block_need: int = 0  # sum of unshared worst-case admission needs
     effective_block_need: int = 0  # sum of post-sharing admission charges
+    # resident-INT4 + online replication (DESIGN.md §5b):
+    resident_bytes_saved: int = 0  # dense-minus-packed expert residency delta
+    routing_steps: int = 0  # decode steps whose router top-k fed the tracker
+    replication_rebalances: int = 0  # replica-set changes applied online
 
 
 @dataclasses.dataclass
@@ -209,6 +215,11 @@ class InferenceEngine:
         prefill_chunk: Optional[int] = None,
         kernel_backend: Optional[str] = None,
         prefix_cache: bool = False,
+        resident_int4: bool = False,
+        int4_group_size: Optional[int] = None,
+        replicate_experts: int = 0,
+        rebalance_interval: int = 32,
+        routing_ema: float = 0.9,
     ):
         self.cfg = cfg
         self.params = params
@@ -253,8 +264,32 @@ class InferenceEngine:
         self._tx = TransitionExecutor()
         if use_int4_transition and cfg.is_moe:
             self._backup_experts()
+        # resident-INT4 expert serving: quantize the expert FFN leaves once
+        # and keep the packed pytrees on device between steps (DESIGN.md
+        # §5b); dequant fuses into grouped_matmul per invocation
+        self.resident_int4 = bool(resident_int4)
+        self.int4_group_size = int4_group_size
+        if self.resident_int4 and not cfg.is_moe:
+            raise ValueError("resident_int4 requires an MoE config")
+        # online hot-expert replication: track router frequencies and grant
+        # up to `replicate_experts` extra replicas to the hot experts every
+        # `rebalance_interval` tracked decode steps
+        self.replicate_experts = int(replicate_experts)
+        if self.replicate_experts < 0:
+            raise ValueError("replicate_experts must be >= 0")
+        if self.replicate_experts and not cfg.is_moe:
+            raise ValueError("expert replication requires an MoE config")
+        self.rebalance_interval = max(int(rebalance_interval), 1)
+        self._tracker: Optional[RoutingTracker] = (
+            RoutingTracker(cfg.num_layers, cfg.n_routed_experts, ema=routing_ema)
+            if self.replicate_experts
+            else None
+        )
+        self._replication: Optional[ExpertReplication] = None
         self._fn_cache: Dict[Any, Any] = {}
         self._live: Optional[_LiveBatch] = None
+        if self.resident_int4 and self._expert_leaves():
+            self._make_experts_resident()
 
     # -- jit function cache ----------------------------------------------
     def _jit(self, key, build):
@@ -278,10 +313,13 @@ class InferenceEngine:
 
     def _decode_fn(self, plan):
         cfg, be = self.cfg, self.kernel_backend
+        collect = self._tracker is not None
         return self._jit(
             ("decode", plan),
             lambda: jax.jit(
-                lambda p, t, c: decode_step(p, cfg, t, c, plan=plan, backend=be)
+                lambda p, t, c: decode_step(
+                    p, cfg, t, c, plan=plan, backend=be, collect_routing=collect
+                )
             ),
         )
 
@@ -317,24 +355,37 @@ class InferenceEngine:
         the engine's backend — the chunk append as a paged C>1 step, the
         decode as a C=1 step."""
         cfg, be = self.cfg, self.kernel_backend
+        collect = self._tracker is not None
 
         def fused(p, chunk_tok, row, dec_tok, cache):
             _, cache = _chunk_append(p, cfg, chunk_tok, row, cache, plan, be)
-            return decode_step(p, cfg, dec_tok, cache, plan=plan, backend=be)
+            return decode_step(
+                p, cfg, dec_tok, cache, plan=plan, backend=be, collect_routing=collect
+            )
 
         return self._jit(("fused", plan), lambda: jax.jit(fused))
 
     def _sharding_for(self, phase: str):
-        """Execution layout for a phase under the active plan."""
+        """Execution layout for a phase under the active plan, with the
+        live expert-replication overlay (when any) folded in — a replica
+        set is part of the plan, so changing it is a plan change."""
         if (
             self.session is not None
             and self.session.mesh is not None
             and self.hap_plan is not None
         ):
-            return self.hap_plan.to_sharding_plan(
-                self.session.mesh, self.cfg, phase=phase
+            return self._with_replication(
+                self.hap_plan.to_sharding_plan(self.session.mesh, self.cfg, phase=phase)
             )
-        return self.plan
+        return self._with_replication(self.plan)
+
+    def _with_replication(self, plan):
+        if self._replication is None:
+            return plan
+        base = plan if plan is not None else NULL_PLAN
+        if base.replication == self._replication:
+            return base
+        return dataclasses.replace(base, replication=self._replication)
 
     # -- transition machinery --------------------------------------------
     def _expert_leaves(self) -> Dict[str, Any]:
@@ -348,6 +399,65 @@ class InferenceEngine:
             # per-layer backups keep dequant granularity matched to the
             # upload pipeline (Fig. 3: layer-wise async upload)
             self._tx.backup(f"moe/{name}", w)
+
+    def _quantized_shardings(self, sharding_plan) -> Dict[str, Any]:
+        """Per-leaf shardings for the packed ``QuantizedExpert`` layout:
+        the dense pspec mapped through ``quantized_pspec`` (a sharded
+        last dim moves to the group axis), with any axis the packed
+        shape cannot divide dropped back to replicated. Empty on a null
+        plan."""
+        if sharding_plan is None or getattr(sharding_plan, "is_null", True):
+            return {}
+        from jax.sharding import PartitionSpec as P
+
+        from repro.models.params import param_pspecs
+
+        pspecs = param_pspecs(self.cfg, sharding_plan)["layers"]["moe"]
+        moe = self.params["layers"]["moe"]
+        out: Dict[str, Any] = {}
+        for n in _EXPERT_LEAVES:
+            spec = quantized_pspec(pspecs[n])
+            packed = getattr(moe[n], "packed", None)
+            if packed is not None:
+                ent = list(tuple(spec)) + [None] * (packed.ndim - len(tuple(spec)))
+                for i, ax in enumerate(ent):
+                    if ax is not None and packed.shape[i] % sharding_plan.axis_size(ax):
+                        ent[i] = None
+                spec = P(*ent)
+            out[n] = sharding_plan.sharding(spec)
+        return out
+
+    def _make_experts_resident(self) -> None:
+        """Flip the expert FFN leaves to resident ``QuantizedExpert``
+        pytrees — INT4 becomes the *serving* format, not just the Eq.-6
+        transition format. The dense weights are quantized once into
+        structured host backups (which the transition path re-uploads),
+        the packed/scales/zeros leaves replace each dense leaf on
+        device, and dequant runs inside ``ops.grouped_matmul`` per
+        invocation (fused per shard under TP expert plans)."""
+        from repro.core.quantization import pick_group_size
+
+        moe = dict(self.params["layers"]["moe"])
+        saved = 0
+        for name in _EXPERT_LEAVES:
+            key = f"moe/{name}"
+            gs = pick_group_size(int(moe[name].shape[-1]), self.int4_group_size or 128)
+            dense_bytes = moe[name].nbytes
+            self._tx.backup_packed(key, moe[name], gs)
+            moe[name] = self._tx.restore_packed(key)
+            saved += dense_bytes - moe[name].nbytes
+        layers = dict(self.params["layers"])
+        layers["moe"] = moe
+        self.params = dict(self.params, layers=layers)
+        shardings = self._quantized_shardings(self._sharding_for("prefill"))
+        for name, sh in shardings.items():
+            if sh is not None:
+                moe[name] = self._tx.reshard(moe[name], sh)
+        self.stats.resident_bytes_saved = int(saved)
+        log.info(
+            "resident INT4 experts: %.2f MiB dense -> packed residency freed",
+            saved / 2**20,
+        )
 
     def _relayout_experts(self, mechanism: str, sharding_plan) -> float:
         """Move the expert weights to a new layout; returns ms.
@@ -368,8 +478,23 @@ class InferenceEngine:
                 n: sharding_plan.sharding(pspecs[n]) for n in _EXPERT_LEAVES
             }
         moe = dict(self.params["layers"]["moe"])
+        q_shardings = (
+            self._quantized_shardings(sharding_plan) if self.resident_int4 else {}
+        )
         for name in _EXPERT_LEAVES:
             key = f"moe/{name}"
+            if self.resident_int4:
+                # resident leaves stay packed through every transition:
+                # int4_upload re-uploads the structured backup, reshard
+                # device_puts the packed pytree — dense weights never
+                # materialize on either side of the move
+                if mechanism == "int4_upload":
+                    moe[name] = self._tx.restore_packed(
+                        key, sharding=q_shardings.get(name)
+                    )
+                elif q_shardings.get(name) is not None:
+                    moe[name] = self._tx.reshard(moe[name], q_shardings[name])
+                continue
             if mechanism == "int4_upload":
                 if key not in self._tx._backups:
                     self._tx.backup(key, moe[name])
@@ -413,6 +538,62 @@ class InferenceEngine:
         return self._relayout_experts(
             self._plan_mechanism(), self._sharding_for("prefill")
         )
+
+    # -- online hot-expert replication ------------------------------------
+    def _ep_size(self) -> int:
+        """EP axis extent of the decode layout (replica totals must pad
+        to a multiple of it so the slot axis still shards)."""
+        plan = self._sharding_for("decode")
+        if plan is None or getattr(plan, "is_null", True):
+            return 1
+        if plan.ffn_mode != "ep" or plan.ep_axis is None:
+            return 1
+        return plan.axis_size(plan.ep_axis)
+
+    def _observe_routing(self, cache):
+        """Feed a decode step's router top-k block into the frequency
+        tracker and strip it from the cache (host-side consumption
+        only — it must not ride into the next step's input pytree)."""
+        if self._tracker is None or getattr(cache, "route_topk", None) is None:
+            return cache
+        self._tracker.update(np.asarray(cache.route_topk))
+        self.stats.routing_steps += 1
+        return cache._replace(route_topk=None)
+
+    def _maybe_rebalance(self) -> bool:
+        """Every ``rebalance_interval`` tracked steps, re-plan the
+        replica set from the live routing frequencies. A changed set is
+        a changed ``ShardingPlan`` (fresh jit entries) and the weights
+        move through the same Eq.-6 relayout path as any plan switch —
+        replication has no bespoke side channel. Returns True when a
+        rebalance was applied (callers re-fetch their decode fn)."""
+        if self._tracker is None or self._tracker.steps == 0:
+            return False
+        if self._tracker.steps % self.rebalance_interval:
+            return False
+        new = plan_replication(
+            self._tracker, self.replicate_experts, align=self._ep_size()
+        )
+        if new.is_identity:
+            new = None
+        if new == self._replication:
+            return False
+        old = self._replication
+        self._replication = new
+        ms = self._relayout_experts("reshard", self._sharding_for("decode"))
+        self.stats.replication_rebalances += 1
+        self.stats.transition_ms_total += ms
+        self.stats.last_transition_ms = ms
+        log.info(
+            "replication rebalance: %s -> %s (%.1f ms, %s)",
+            old.degrees if old is not None else "uniform",
+            new.degrees if new is not None else "uniform",
+            ms,
+            replication_summary(new, self._tracker.frequencies())
+            if new is not None
+            else {},
+        )
+        return True
 
     # -- adaptive re-planning --------------------------------------------
     def _activate_plan(self, batch_workload: Workload, phase: str = "prefill") -> float:
@@ -529,6 +710,9 @@ class InferenceEngine:
                 break
             key, sub = jax.random.split(key)
             logits, cache = decode_fn(self.params, next_tok[:, None], cache)
+            cache = self._observe_routing(cache)
+            if self._maybe_rebalance():
+                decode_fn = self._decode_fn(self._sharding_for("decode"))
             next_tok = sample(logits, sampling, sub)
             if self.eos_id >= 0:
                 done |= np.asarray(next_tok) == self.eos_id
@@ -939,7 +1123,9 @@ class InferenceEngine:
             # joiner's prefill_ms counts only its unfused chunk steps
             self.stats.decode_steps += 1
             self.stats.fused_steps += 1
+            live.cache = self._observe_routing(live.cache)
             self._apply_sampled(toks, active, step_ms)
+            self._maybe_rebalance()
             return
 
         fn = self._chunk_fn(plan)
@@ -1016,7 +1202,9 @@ class InferenceEngine:
         toks = np.asarray(sample(logits, sampling, key))
         step_ms = (time.perf_counter() - t0) * 1e3
         self.stats.decode_steps += 1
+        live.cache = self._observe_routing(live.cache)
         self._apply_sampled(toks, active, step_ms)
+        self._maybe_rebalance()
 
     def retire(self) -> List[Completion]:
         """Free slots whose request hit EOS or its output budget; returns

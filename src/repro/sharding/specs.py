@@ -63,6 +63,66 @@ class KernelShardAxes:
 
 
 @dataclasses.dataclass(frozen=True)
+class ExpertReplication:
+    """Replica-aware expert placement (hot-expert replication).
+
+    ``degrees[e]`` is the replica count of expert ``e`` (>= 1);
+    ``order`` is a permutation of expert ids giving the slot layout —
+    expert ``order[0]``'s replica block first, then ``order[1]``'s, and
+    so on. The replication planner orders experts by inter-layer
+    co-fire affinity so experts that fire together land in the same
+    EP slot-axis shard (cutting all2all fan-out); dispatch maps token
+    copy ``p`` of expert ``e`` to replica ``p % degrees[e]`` inside the
+    expert's contiguous slot block, which both balances replica load
+    deterministically and keeps the remap a cheap gather.
+
+    Frozen + tuple-typed so a plan carrying one stays hashable (jit
+    cache keys, ``_fn_cache`` entries) — a replica-set change is a NEW
+    plan and therefore a re-trace, which is exactly the Eq.-6
+    transition semantics the engine's rebalance hook piggybacks on.
+    """
+    degrees: Tuple[int, ...]
+    order: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.order:
+            object.__setattr__(self, "order",
+                               tuple(range(len(self.degrees))))
+        if sorted(self.order) != list(range(len(self.degrees))):
+            raise ValueError(f"order {self.order} is not a permutation")
+        if any(d < 1 for d in self.degrees):
+            raise ValueError(f"degrees must be >= 1, got {self.degrees}")
+
+    @property
+    def n_experts(self) -> int:
+        return len(self.degrees)
+
+    @property
+    def total_slots(self) -> int:
+        return sum(self.degrees)
+
+    @property
+    def is_identity(self) -> bool:
+        return all(d == 1 for d in self.degrees) and \
+            self.order == tuple(range(len(self.degrees)))
+
+    def slot_to_expert(self) -> Tuple[int, ...]:
+        out = []
+        for e in self.order:
+            out.extend([e] * self.degrees[e])
+        return tuple(out)
+
+    def expert_offsets(self) -> Tuple[int, ...]:
+        """Slot index of each expert's first replica (indexed by expert id)."""
+        offsets = [0] * len(self.degrees)
+        pos = 0
+        for e in self.order:
+            offsets[e] = pos
+            pos += self.degrees[e]
+        return tuple(offsets)
+
+
+@dataclasses.dataclass(frozen=True)
 class ShardingPlan:
     mesh: Optional[Mesh] = None
     # axis-name assignments (None = unused)
@@ -85,6 +145,12 @@ class ShardingPlan:
     # training-side analog of HAP's attention-DP strategy (beyond-paper,
     # see EXPERIMENTS §Perf).
     fsdp: bool = False
+    # Hot-expert replication: when set, MoE dispatch routes token copies
+    # to replica *slots* (see ExpertReplication) instead of raw expert
+    # ids. Part of the frozen plan on purpose: a replica-set change is a
+    # plan change, so the engine's jit cache and transition machinery
+    # treat a rebalance exactly like any other plan switch.
+    replication: Optional[ExpertReplication] = None
 
     # ---------------------------------------------------------------
     @property
@@ -198,6 +264,18 @@ class ShardingPlan:
 
 
 NULL_PLAN = ShardingPlan()
+
+
+def quantized_pspec(spec: P) -> P:
+    """Dense weight PartitionSpec -> resident-INT4 packed-layout spec.
+
+    A ``QuantizedExpert`` splits the dense last dim into (n_groups,
+    gs//2): sharding of the last dim moves to the group axis (group
+    spans tile last-dim spans), the nibble axis is never sharded, and
+    the scales/zeros leaves — same rank, trailing dim 1 — take the same
+    spec by pytree-prefix broadcast.
+    """
+    return P(*tuple(spec), None)
 
 
 def _resolve_plan(mesh: Optional[Mesh], cfg, *, want_attn_tp: bool,

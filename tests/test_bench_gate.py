@@ -1,19 +1,30 @@
 """Tolerance edges of the CI bench-gate (benchmarks/check_regression.py):
 the exactly-at-tolerance boundary, missing baseline keys, the wide
-absolute-tok/s band, boolean gates, and --update's value-only rewrite.
+absolute-tok/s band, boolean gates, --update's value-only rewrite, the
+named suites with their max_value parity ceilings and max_increase
+walltime bands, and the bench-trajectory merge
+(benchmarks/bench_trajectory.py).
 """
 import importlib.util
+import json
 import os
 import sys
 
 import pytest
 
-_SPEC = importlib.util.spec_from_file_location(
-    "check_regression",
-    os.path.join(os.path.dirname(__file__), "..", "benchmarks",
-                 "check_regression.py"))
-check_regression = importlib.util.module_from_spec(_SPEC)
-_SPEC.loader.exec_module(check_regression)
+
+def _load_bench_module(name):
+    spec = importlib.util.spec_from_file_location(
+        name,
+        os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                     f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_regression = _load_bench_module("check_regression")
+bench_trajectory = _load_bench_module("bench_trajectory")
 
 
 def _baseline(**metrics):
@@ -87,6 +98,113 @@ def test_update_rewrites_values_keeps_tolerances():
     assert out["metrics"]["m.x"] == {"value": 2.5, "max_regression": 0.5}
     # absent metrics keep their committed value (no silent deletion)
     assert out["metrics"]["m.gone"]["value"] == 9.0
+
+
+def test_suite_selection_and_unknown_suite():
+    base = {
+        "metrics": {"top.x": {"value": 1.0}},
+        "suites": {"kern": {"metrics": {"k.err": {"max_value": 0.01}}}},
+    }
+    # default: only the top-level metrics run
+    rows, ok = check_regression.check({"top": {"x": 1.0}}, base)
+    assert ok and [r[0] for r in rows] == ["top.x"]
+    # suite: only that suite's metrics run
+    rows, ok = check_regression.check({"k": {"err": 0.001}}, base, "kern")
+    assert ok and [r[0] for r in rows] == ["k.err"]
+    with pytest.raises(KeyError):
+        check_regression.select_metrics(base, "nope")
+
+
+def test_max_value_is_an_absolute_ceiling():
+    """Parity errors gate fresh <= max_value; no baseline value involved
+    and improvements (smaller errors) always pass."""
+    base = {"suites": {"k": {"metrics": {"gmm.max_err": {"max_value": 0.01}}}}}
+    assert check_regression.check({"gmm": {"max_err": 0.01}}, base, "k")[1]
+    assert check_regression.check({"gmm": {"max_err": 0.0}}, base, "k")[1]
+    rows, ok = check_regression.check({"gmm": {"max_err": 0.011}}, base, "k")
+    assert not ok and rows[0][3].startswith("FAIL")
+    # missing key still fails loudly
+    assert not check_regression.check({}, base, "k")[1]
+
+
+def test_max_increase_is_a_lower_is_better_band():
+    """Walltimes gate fresh <= value * (1 + max_increase): faster always
+    passes, collapse past the wide band fails."""
+    base = {"suites": {"k": {"metrics": {
+        "gmm.us": {"value": 100.0, "max_increase": 4.0}}}}}
+    assert check_regression.check({"gmm": {"us": 10.0}}, base, "k")[1]
+    assert check_regression.check({"gmm": {"us": 500.0}}, base, "k")[1]
+    assert not check_regression.check({"gmm": {"us": 500.1}}, base, "k")[1]
+
+
+def test_update_suite_keeps_ceilings_and_other_suites():
+    base = {
+        "metrics": {"top.x": {"value": 1.0}},
+        "suites": {"k": {"metrics": {
+            "gmm.us": {"value": 100.0, "max_increase": 4.0},
+            "gmm.max_err": {"max_value": 0.01},
+        }}},
+    }
+    out = check_regression.update_baseline(
+        {"gmm": {"us": 50.0, "max_err": 0.5}, "top": {"x": 9.0}}, base, "k")
+    # the suite's measured value moved, its policy ceiling did not
+    assert out["suites"]["k"]["metrics"]["gmm.us"]["value"] == 50.0
+    assert out["suites"]["k"]["metrics"]["gmm.max_err"] == {"max_value": 0.01}
+    # the unselected top-level metrics were untouched
+    assert out["metrics"]["top.x"]["value"] == 1.0
+
+
+def test_trajectory_merge_appends_and_caps(tmp_path):
+    hist = {"history": [{"run_id": str(i)} for i in range(25)]}
+    merged = bench_trajectory.merge(hist, {"run_id": "new"})
+    assert len(merged["history"]) == bench_trajectory.MAX_HISTORY
+    assert merged["history"][-1]["run_id"] == "new"
+    assert merged["history"][0]["run_id"] == "6"  # oldest dropped
+    # empty previous trajectory: history starts at this run
+    assert bench_trajectory.merge({}, {"run_id": "first"})["history"] == [
+        {"run_id": "first"}]
+
+
+def test_trajectory_snapshot_and_table(tmp_path):
+    (tmp_path / "BENCH_scenario_speedup.json").write_text(json.dumps(
+        {"continuous_vs_static": {"static_tok_per_s": 300.0,
+                                  "continuous_tok_per_s": 390.0,
+                                  "speedup": 1.3, "solo_exact": True}}))
+    (tmp_path / "BENCH_resident_int4.json").write_text(json.dumps(
+        {"resident_int4": {"int4_tok_per_s": 900.0,
+                           "relative_tok_per_s": 0.9,
+                           "max_experts_int4": 28,
+                           "roundtrip_exact": True}}))
+    (tmp_path / "BENCH_kernel_bench.json").write_text(json.dumps(
+        {"parity_ok": True, "grouped_matmul": {
+            "points": {"int4": {"max_err": 2e-5}}}}))
+    snap = bench_trajectory.snapshot(str(tmp_path))
+    assert snap["continuous_speedup"] == 1.3
+    assert snap["int4_tok_per_s"] == 900.0
+    assert snap["gmm_int4_max_err"] == 2e-5
+    assert snap["kernel_parity_ok"] is True
+    assert snap["prefix_speedup"] is None  # missing artifact -> null
+    table = bench_trajectory.markdown_table(
+        [dict(snap, run_id="7", commit="abcdef012345")])
+    assert "| run |" in table and "| 7 | abcdef0 |" in table
+    assert "2.0e-05" in table and " - " in table  # null renders as dash
+
+
+def test_trajectory_main_roundtrip(tmp_path, monkeypatch, capsys):
+    """Two chained runs: the second extends the first's history."""
+    (tmp_path / "BENCH_kernel_bench.json").write_text('{"parity_ok": true}')
+    prev = tmp_path / "prev"
+    out = tmp_path / "BENCH_trajectory.json"
+    for run in ("1", "2"):
+        monkeypatch.setattr(sys, "argv", [
+            "bench_trajectory.py", "--prev", str(prev), "--current",
+            str(tmp_path), "--out", str(out), "--run-id", run])
+        bench_trajectory.main()
+        prev.mkdir(exist_ok=True)
+        (prev / "BENCH_trajectory.json").write_text(out.read_text())
+    traj = json.loads(out.read_text())
+    assert [e["run_id"] for e in traj["history"]] == ["1", "2"]
+    assert "Bench trajectory" in capsys.readouterr().out
 
 
 def test_main_exit_code(tmp_path, monkeypatch, capsys):

@@ -1,0 +1,233 @@
+"""Online hot-expert replication: the ``ExpertReplication`` placement,
+water-filling degree assignment (``repro.core.ilp.replication_degrees``),
+the routing-frequency tracker (EMA decay, top-k ties, co-fire affinity),
+plan determinism, and the engine's rebalance hook firing through the
+Eq.-6 transition path — token-exact before and after.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core.ilp import replication_degrees
+from repro.models import init_params
+from repro.models.moe import replica_coords, slot_weights
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.replication import (
+    RoutingTracker,
+    affinity_order,
+    plan_replication,
+    replication_summary,
+)
+from repro.serving.sampling import SamplingParams
+from repro.sharding.specs import ExpertReplication
+
+
+# ---------------------------------------------------------------------------
+# ExpertReplication placement
+# ---------------------------------------------------------------------------
+def test_expert_replication_slot_layout():
+    rep = ExpertReplication((2, 1, 3), order=(2, 0, 1))
+    assert rep.n_experts == 3
+    assert rep.total_slots == 6
+    assert not rep.is_identity
+    # order gives the block layout; degrees index by expert id
+    assert rep.slot_to_expert() == (2, 2, 2, 0, 0, 1)
+    assert rep.expert_offsets() == (3, 5, 0)
+
+
+def test_expert_replication_identity_and_validation():
+    assert ExpertReplication((1, 1)).is_identity
+    assert ExpertReplication((1, 1)).order == (0, 1)  # default order
+    assert not ExpertReplication((1, 1), order=(1, 0)).is_identity
+    with pytest.raises(ValueError, match="permutation"):
+        ExpertReplication((1, 1), order=(0, 0))
+    with pytest.raises(ValueError, match=">= 1"):
+        ExpertReplication((1, 0))
+
+
+def test_replica_coords_round_robin():
+    """Token copy p of expert e lands on replica p % degree(e) in the
+    expert's slot block, with the position index compacted per replica."""
+    rep = ExpertReplication((2, 1), order=(0, 1))
+    fe = np.array([0, 0, 0, 0, 1, 1])
+    pe = np.array([0, 1, 2, 3, 0, 1])
+    slot, pos = replica_coords(np.asarray(fe), np.asarray(pe), rep)
+    assert list(np.asarray(slot)) == [0, 1, 0, 1, 2, 2]
+    assert list(np.asarray(pos)) == [0, 0, 1, 1, 0, 1]
+
+
+def test_slot_weights_gather():
+    rep = ExpertReplication((1, 2), order=(1, 0))
+    w = np.arange(6, dtype=np.float32).reshape(2, 3)
+    out = np.asarray(slot_weights(jax.numpy.asarray(w), rep))
+    np.testing.assert_array_equal(out, w[[1, 1, 0]])
+
+
+# ---------------------------------------------------------------------------
+# water-filling degrees
+# ---------------------------------------------------------------------------
+def test_replication_degrees_water_filling():
+    """Each grant goes to the highest per-replica load; the hot expert
+    absorbs grants until its split load drops below the runner-up."""
+    assert replication_degrees([0.7, 0.1, 0.1, 0.1], 2) == (3, 1, 1, 1)
+    assert replication_degrees([0.6, 0.3, 0.1], 1) == (2, 1, 1)
+    # 0.6/2 = 0.3 ties the runner-up: the grant breaks toward the LOWER
+    # expert id, keeping plans deterministic under identical snapshots
+    assert replication_degrees([0.6, 0.3, 0.1], 2) == (3, 1, 1)
+    assert replication_degrees([0.6, 0.3, 0.1], 3) == (3, 2, 1)
+    assert replication_degrees([0.25, 0.25, 0.25, 0.25], 0) == (1, 1, 1, 1)
+
+
+def test_replication_degrees_max_degree_and_degenerate():
+    # the cap redirects grants to the next-hottest expert
+    assert replication_degrees([0.9, 0.05, 0.05], 3, max_degree=2) == (2, 2, 2)
+    # every expert capped: surplus grants are dropped, not forced
+    assert replication_degrees([0.9, 0.1], 5, max_degree=2) == (2, 2)
+    # zero/empty frequency snapshots fall back to uniform
+    assert replication_degrees([0.0, 0.0], 2) == (2, 2)
+    assert replication_degrees([], 3) == ()
+
+
+# ---------------------------------------------------------------------------
+# routing tracker
+# ---------------------------------------------------------------------------
+def test_tracker_ema_decay_math():
+    tr = RoutingTracker(n_layers=1, n_experts=3, ema=0.5)
+    tr.update(np.array([[[0, 1], [0, 2]]]))  # counts: e0=2, e1=1, e2=1
+    np.testing.assert_allclose(tr.counts[0], [1.0, 0.5, 0.5])
+    tr.update(np.zeros((1, 2, 2), np.int64))  # all traffic to e0: e0=4
+    np.testing.assert_allclose(tr.counts[0], [2.5, 0.25, 0.25])
+    assert tr.steps == 2
+    # frequencies normalize the aggregate
+    np.testing.assert_allclose(tr.frequencies().sum(), 1.0)
+    assert int(np.argmax(tr.frequencies())) == 0
+
+
+def test_tracker_topk_ties_count_both():
+    """A tie inside one token's top-k increments BOTH experts — load is
+    what matters, not the gate split."""
+    tr = RoutingTracker(n_layers=1, n_experts=2, ema=0.0)
+    tr.update(np.array([[[0, 0], [0, 1]]]))
+    np.testing.assert_allclose(tr.counts[0], [3.0, 1.0])
+
+
+def test_tracker_accepts_single_layer_block():
+    tr = RoutingTracker(n_layers=2, n_experts=2, ema=0.0)
+    tr.update(np.array([[0, 1]]))  # (T, k) promotes to (1, T, k)
+    np.testing.assert_allclose(tr.counts, [[1.0, 1.0], [0.0, 0.0]])
+    with pytest.raises(ValueError):
+        RoutingTracker(1, 2, ema=1.0)  # ema must be < 1
+
+
+def test_tracker_affinity_and_order():
+    """Co-firing adjacent-layer top-1 pairs chain the affinity order:
+    the hottest expert leads, its strongest co-fire partner follows."""
+    tr = RoutingTracker(n_layers=2, n_experts=4, ema=0.0)
+    # layer0 top-1 always 2 (and one 2,2 tie making it the hottest
+    # overall), layer1 top-1 always 0 -> (2, 0) co-fire dominates
+    tr.update(np.array([[[2, 1], [2, 2]], [[0, 3], [0, 3]]]))
+    assert tr.affinity[2, 0] > 0 and tr.affinity[0, 2] > 0  # symmetric
+    order = affinity_order(tr)
+    assert order[:2] == (2, 0)  # hottest leads, co-fire partner follows
+    assert sorted(order) == [0, 1, 2, 3]
+
+
+def test_plan_replication_deterministic_and_aligned():
+    def make_tracker():
+        tr = RoutingTracker(n_layers=1, n_experts=4, ema=0.9)
+        rng = np.random.default_rng(7)
+        for _ in range(5):
+            tr.update(rng.integers(0, 4, size=(1, 6, 2)))
+        return tr
+
+    a = plan_replication(make_tracker(), 2)
+    b = plan_replication(make_tracker(), 2)
+    assert a == b  # identical snapshots -> identical plans
+    assert a.total_slots == 4 + 2
+    # align pads the slot total to a multiple of the EP axis
+    c = plan_replication(make_tracker(), 1, align=4)
+    assert c.total_slots % 4 == 0 and c.total_slots >= 5
+    capped = plan_replication(make_tracker(), 3, max_degree=2)
+    assert max(capped.degrees) <= 2
+
+
+def test_replication_summary_load_accounting():
+    rep = ExpertReplication((2, 1))
+    s = replication_summary(rep, [0.8, 0.2])
+    assert s["total_slots"] == 3
+    assert s["max_load_unreplicated"] == pytest.approx(0.8)
+    assert s["max_load_replicated"] == pytest.approx(0.4)
+
+
+# ---------------------------------------------------------------------------
+# engine: skewed routing triggers exactly one rebalance, token-exact
+# ---------------------------------------------------------------------------
+def _skewed_moe_setup():
+    """Doctor the router so expert 0 appears in EVERY token's top-2:
+    expert 1 projects onto +v, everyone else onto -v, so whichever sign
+    x.v takes, expert 0 is either the top-1 tie winner or the runner-up
+    — a guaranteed hot expert regardless of the activations."""
+    cfg = dataclasses.replace(reduced("deepseek-moe-16b"),
+                              capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    router = np.asarray(params["layers"]["moe"]["router"], np.float32)
+    L, d, E = router.shape
+    v = np.random.default_rng(3).normal(size=d).astype(np.float32)
+    doctored = np.broadcast_to(-v[None, :, None], (L, d, E)).copy()
+    doctored[:, :, 1] = v
+    params["layers"]["moe"]["router"] = jax.numpy.asarray(doctored)
+    return cfg, params
+
+
+def _serve(eng, prompts, gen):
+    for p in prompts:
+        eng.submit(Request(p, max_new_tokens=gen))
+    return [c.tokens for c in eng.run(SamplingParams(temperature=0.0))]
+
+
+def test_engine_skew_triggers_exactly_one_rebalance():
+    """Forced hot-expert skew fires the rebalance hook exactly once in
+    the decode budget (one interval boundary inside the run), the plan
+    gives the hot expert the highest replica degree, and serving stays
+    token-exact vs an unreplicated engine — capacity never binds, so
+    replication is a pure load-balance change."""
+    cfg, params = _skewed_moe_setup()
+    prompts = [[1, 2, 3, 4], [9, 8, 7]]
+    gen = 10
+    eng = InferenceEngine(cfg, params, max_batch=2, replicate_experts=2,
+                          rebalance_interval=6)
+    toks = _serve(eng, prompts, gen)
+    assert eng.stats.replication_rebalances == 1
+    assert 6 <= eng.stats.routing_steps < 12  # one boundary in-budget
+    rep = eng._replication
+    assert rep is not None and rep.total_slots == cfg.n_routed_experts + 2
+    freqs = eng._tracker.frequencies()
+    hot = int(np.argmax(freqs))
+    assert freqs[0] == max(freqs)  # expert 0 saw every token
+    assert rep.degrees[hot] == max(rep.degrees) >= 2
+    plain = InferenceEngine(cfg, params, max_batch=2)
+    assert _serve(plain, prompts, gen) == toks
+    assert plain.stats.replication_rebalances == 0
+
+
+def test_engine_no_rebalance_before_interval():
+    cfg, params = _skewed_moe_setup()
+    eng = InferenceEngine(cfg, params, max_batch=2, replicate_experts=2,
+                          rebalance_interval=64)
+    _serve(eng, [[1, 2, 3]], gen=5)
+    assert eng.stats.routing_steps > 0  # the tracker IS observing
+    assert eng.stats.replication_rebalances == 0
+    assert eng._replication is None
+
+
+def test_engine_replicate_requires_moe():
+    cfg = reduced("mistral-nemo-12b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="MoE"):
+        InferenceEngine(cfg, params, replicate_experts=2)
+    cfg2, params2 = _skewed_moe_setup()
+    with pytest.raises(ValueError, match=">= 0"):
+        InferenceEngine(cfg2, params2, replicate_experts=-1)
