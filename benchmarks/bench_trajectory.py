@@ -36,6 +36,7 @@ COLUMNS = (
     ("cont tok/s", "continuous_tok_per_s", "{:.0f}"),
     ("cont x", "continuous_speedup", "{:.2f}"),
     ("prefix x", "prefix_speedup", "{:.2f}"),
+    ("ovl x", "overlap_speedup", "{:.2f}"),
     ("int4 tok/s", "int4_tok_per_s", "{:.0f}"),
     ("int4 rel", "int4_relative", "{:.2f}"),
     ("gmm int4 err", "gmm_int4_max_err", "{:.1e}"),
@@ -51,6 +52,29 @@ def _load(path: str) -> dict:
             return json.load(f)
     except (OSError, ValueError):
         return {}
+
+
+def find_prev_trajectory(prev_dir: str) -> dict:
+    """Previous run's trajectory, or {} to start fresh.
+
+    Resilient to every first-run / decay mode of the CI step: the
+    ``--prev`` directory may not exist (no previous successful run, or
+    ``gh run download`` failed), may be empty (artifact expired), or may
+    hold the artifact under a nested subdirectory (download layouts
+    differ when ``-n`` matches more than one artifact) — so search
+    recursively for the first parseable ``BENCH_trajectory.json``.
+    """
+    direct = _load(os.path.join(prev_dir, "BENCH_trajectory.json"))
+    if direct:
+        return direct
+    if not os.path.isdir(prev_dir):
+        return {}
+    for root, _dirs, files in sorted(os.walk(prev_dir)):
+        if "BENCH_trajectory.json" in files:
+            found = _load(os.path.join(root, "BENCH_trajectory.json"))
+            if found:
+                return found
+    return {}
 
 
 def _get(d: dict, *keys):
@@ -69,14 +93,20 @@ def snapshot(current_dir: str) -> dict:
     prefix = _load(os.path.join(current_dir, "BENCH_shared_prefix.json"))
     ri = _load(os.path.join(current_dir, "BENCH_resident_int4.json"))
     kb = _load(os.path.join(current_dir, "BENCH_kernel_bench.json"))
+    ov = _load(os.path.join(current_dir, "BENCH_overlap.json"))
     h2h = smoke.get("continuous_vs_static", {})
     r = ri.get("resident_int4", {})
+    o = ov.get("overlap", {})
     return {
         "static_tok_per_s": h2h.get("static_tok_per_s"),
         "continuous_tok_per_s": h2h.get("continuous_tok_per_s"),
         "continuous_speedup": h2h.get("speedup"),
         "solo_exact": h2h.get("solo_exact"),
         "prefix_speedup": _get(prefix, "shared_prefix", "speedup"),
+        "overlap_tok_per_s": o.get("overlap_tok_per_s"),
+        "overlap_speedup": o.get("speedup"),
+        "overlap_exact": o.get("overlap_exact"),
+        "async_restores": o.get("async_restores"),
         "int4_tok_per_s": r.get("int4_tok_per_s"),
         "int4_relative": r.get("relative_tok_per_s"),
         "max_experts_int4": r.get("max_experts_int4"),
@@ -142,7 +172,7 @@ def main() -> None:
         "date": datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
         **snapshot(args.current),
     }
-    prev = _load(os.path.join(args.prev, "BENCH_trajectory.json"))
+    prev = find_prev_trajectory(args.prev)
     traj = merge(prev, entry)
     with open(args.out, "w") as f:
         json.dump(traj, f, indent=2, sort_keys=True)

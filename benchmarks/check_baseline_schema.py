@@ -1,0 +1,156 @@
+"""Schema check for ``benchmarks/baseline.json`` (the workflow-lint job).
+
+``check_regression.py`` silently treats a malformed gate entry as a
+crash at gate time — in the job that was *supposed* to catch the
+regression. This linter fails fast at lint time instead: every entry in
+the top-level ``metrics`` and every ``suites.<name>.metrics`` must be
+one of the four shapes ``check_one`` implements:
+
+- ``{"max_value": <number>}``                      absolute ceiling
+- ``{"value": <bool>}``                            exact match
+- ``{"value": <number>[, "max_regression": f]}``   higher-is-better
+- ``{"value": <number>, "max_increase": f}``       walltime band
+
+Unknown keys, contradictory shapes (``max_value`` + ``value``), and
+non-numeric tolerances are all errors. With ``--workflow`` it also
+cross-checks the CI workflow: every ``--suite NAME`` passed to
+``check_regression.py`` in the workflow must exist in the baseline, and
+every baseline suite should be exercised by some workflow step (a
+warning-level error: a suite nobody runs is a dead gate).
+
+Usage::
+
+    python benchmarks/check_baseline_schema.py \
+        [--baseline benchmarks/baseline.json] \
+        [--workflow .github/workflows/ci.yml]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import os
+import re
+import sys
+
+KNOWN_KEYS = {"value", "max_value", "max_regression", "max_increase"}
+
+
+def _is_number(x) -> bool:
+    # bools are ints in Python; a boolean tolerance/ceiling is an error
+    return isinstance(x, numbers.Real) and not isinstance(x, bool)
+
+
+def check_entry(name: str, spec) -> list:
+    """Errors for one gate entry (empty = well-formed)."""
+    errs = []
+    if not isinstance(spec, dict):
+        return [f"{name}: entry must be an object, got {type(spec).__name__}"]
+    unknown = set(spec) - KNOWN_KEYS
+    if unknown:
+        errs.append(f"{name}: unknown key(s) {sorted(unknown)}")
+    if "max_value" in spec:
+        if not _is_number(spec["max_value"]):
+            errs.append(f"{name}: max_value must be a number")
+        extra = set(spec) & (KNOWN_KEYS - {"max_value"})
+        if extra:
+            errs.append(f"{name}: max_value is a standalone ceiling; "
+                        f"drop {sorted(extra)}")
+        return errs
+    if "value" not in spec:
+        errs.append(f"{name}: needs 'value' or 'max_value'")
+        return errs
+    v = spec["value"]
+    if isinstance(v, bool):
+        extra = set(spec) - {"value"}
+        if extra:
+            errs.append(f"{name}: boolean gates are exact; "
+                        f"drop {sorted(extra)}")
+        return errs
+    if not _is_number(v):
+        errs.append(f"{name}: value must be a number or bool")
+        return errs
+    if "max_increase" in spec and "max_regression" in spec:
+        errs.append(f"{name}: max_increase and max_regression conflict "
+                    "(lower-is-better vs higher-is-better)")
+    for tol in ("max_increase", "max_regression"):
+        if tol in spec and (not _is_number(spec[tol]) or spec[tol] < 0):
+            errs.append(f"{name}: {tol} must be a non-negative number")
+    return errs
+
+
+def check_baseline(baseline: dict) -> list:
+    errs = []
+    if not isinstance(baseline.get("metrics", {}), dict):
+        return ["top-level 'metrics' must be an object"]
+    for name, spec in baseline.get("metrics", {}).items():
+        errs += check_entry(f"metrics.{name}", spec)
+    suites = baseline.get("suites", {})
+    if not isinstance(suites, dict):
+        return errs + ["'suites' must be an object"]
+    for suite, body in suites.items():
+        if not isinstance(body, dict) or not isinstance(
+                body.get("metrics"), dict):
+            errs.append(f"suites.{suite}: needs a 'metrics' object")
+            continue
+        if not body["metrics"]:
+            errs.append(f"suites.{suite}: empty gate set (dead suite)")
+        for name, spec in body["metrics"].items():
+            errs += check_entry(f"suites.{suite}.{name}", spec)
+    return errs
+
+
+def workflow_suites(workflow_text: str) -> set:
+    """Every --suite NAME passed to check_regression.py in the workflow.
+
+    Gate invocations use YAML folded (``>``) blocks, so ``--suite`` may
+    sit on a different line than ``check_regression.py`` — match the
+    flag anywhere (it has no other use in the workflow).
+    """
+    return set(re.findall(r"--suite[= ](\w+)", workflow_text))
+
+
+def cross_check(baseline: dict, workflow_text: str) -> list:
+    errs = []
+    used = workflow_suites(workflow_text)
+    have = set(baseline.get("suites", {}))
+    for suite in sorted(used - have):
+        errs.append(f"workflow gates --suite {suite} but baseline.json "
+                    "has no such suite")
+    for suite in sorted(have - used):
+        errs.append(f"baseline suite {suite!r} is gated by no workflow "
+                    "step (dead gate)")
+    return errs
+
+
+def main() -> None:
+    here = os.path.dirname(os.path.abspath(__file__))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline",
+                    default=os.path.join(here, "baseline.json"))
+    ap.add_argument("--workflow", default=None,
+                    help="CI workflow to cross-check --suite references "
+                         "against (e.g. .github/workflows/ci.yml)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    errs = check_baseline(baseline)
+    n_entries = len(baseline.get("metrics", {})) + sum(
+        len(s.get("metrics", {}))
+        for s in baseline.get("suites", {}).values())
+    if args.workflow:
+        with open(args.workflow) as f:
+            errs += cross_check(baseline, f.read())
+    for e in errs:
+        print(f"baseline-schema: {e}", file=sys.stderr)
+    if errs:
+        sys.exit(1)
+    suites = sorted(baseline.get("suites", {}))
+    print(f"baseline-schema: ok ({n_entries} gate entries; "
+          f"suites: {', '.join(suites) or 'none'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,10 +92,18 @@ def fixed_plan(attn: str, expert_prefill: str,
 
 class HAPPlanner:
     def __init__(self, cfg: ModelConfig, chip: str, n_devices: int,
-                 model: Optional[LatencyModel] = None, seed: int = 0):
+                 model: Optional[LatencyModel] = None, seed: int = 0,
+                 moe_pipeline: int = 0, async_transitions: bool = True):
         self.cfg = cfg
         self.chip = get_chip(chip)
         self.n = n_devices
+        # Overlap knobs mirroring the serving engine: ``moe_pipeline`` is
+        # the EP micro-batch pipeline depth (0 = auto) priced through
+        # ``latency.overlapped_comm``; ``async_transitions`` selects the
+        # background-thread restore executor, which keeps Eq. 6's overlap
+        # term (False prices the blocking restore: t_overlap = 0).
+        self.moe_pipeline = moe_pipeline
+        self.async_transitions = async_transitions
         self.sim = InferenceSimulator(cfg, chip, n_devices, model=model,
                                       seed=seed)
         self.attn_space: List[AttnStrategy] = attention_strategies(
@@ -119,10 +127,17 @@ class HAPPlanner:
                       for e in self.expert_space])
         P = np.zeros((Ka, Ke))
         D = np.zeros((Ka, Ke))
+        from .latency import ep_pipeline_chunks
         for k, s in enumerate(self.attn_space):
             for i, e in enumerate(self.expert_space):
-                P[k, i] = L * self.sim.comm_time(w, "prefill", s, e)
-                D[k, i] = L * S_out * self.sim.comm_time(w, "decode", s, e)
+                kp = ep_pipeline_chunks(self.cfg, w, "prefill", e, self.n,
+                                        self.moe_pipeline)
+                kd = ep_pipeline_chunks(self.cfg, w, "decode", e, self.n,
+                                        self.moe_pipeline)
+                P[k, i] = L * self.sim.comm_time(w, "prefill", s, e,
+                                                 pipeline_chunks=kp)
+                D[k, i] = L * S_out * self.sim.comm_time(
+                    w, "decode", s, e, pipeline_chunks=kd)
 
         # Eq. 6 overlap window: one layer's prefill time under strategy i
         # (attention term approximated with the cheapest attention strategy,
@@ -133,7 +148,8 @@ class HAPPlanner:
                             + self.sim.expert_time(w, "prefill", e)
                             for e in self.expert_space])
         C = switching_matrix(self.cfg, w, self.chip, self.n,
-                             self.expert_space, t_layer, gt=self.sim.gt)
+                             self.expert_space, t_layer, gt=self.sim.gt,
+                             async_restore=self.async_transitions)
 
         feas = np.zeros((Ka, Ke), bool)
         for k, s in enumerate(self.attn_space):
@@ -174,7 +190,8 @@ class HAPPlanner:
         t_layer = (self.sim.attn_time(w, "prefill", self.attn_space[0])
                    + self.sim.expert_time(w, "prefill", e_from))
         return transition_costs(self.cfg, w, self.chip, self.n, e_from,
-                                e_to, t_layer, gt=self.sim.gt)
+                                e_to, t_layer, gt=self.sim.gt,
+                                async_restore=self.async_transitions)
 
     def _mechanism(self, w: Workload, i: int, j: int) -> str:
         ei, ej = self.expert_space[i], self.expert_space[j]

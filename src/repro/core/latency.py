@@ -166,6 +166,47 @@ def cached_latency_model(chip_name: str, seed: int = 0,
 # ---------------------------------------------------------------------------
 # module-level estimators (planner-facing)
 # ---------------------------------------------------------------------------
+def overlapped_comm(t_comm: float, t_compute: float, chunks: int) -> float:
+    """Exposed comm time under the EP micro-batch pipeline (DESIGN.md §4e).
+
+    With K capacity slabs in flight, each slab's all_to_all overlaps a
+    neighbouring slab's expert FFN, so only the pipeline fill/drain
+    (t_comm / K) plus whatever comm exceeds the compute it hides behind
+    stays on the critical path:
+
+        t_exposed = t_comm/K + max(0, t_comm - t_compute) * (K-1)/K
+
+    Compute-bound layers (t_comm << t_compute) expose ~t_comm/K; comm-
+    bound layers degrade gracefully to t_comm - t_compute*(K-1)/K — the
+    compute is the only thing available to hide behind.
+    """
+    if chunks <= 1 or t_comm <= 0.0:
+        return t_comm
+    k = float(chunks)
+    return t_comm / k + max(0.0, t_comm - t_compute) * (k - 1.0) / k
+
+
+def ep_pipeline_chunks(cfg: ModelConfig, w: Workload, phase: str, e,
+                       n_devices: int, knob: int = 0) -> int:
+    """Model-side mirror of ``models.moe.pipeline_chunks``: the K the
+    runtime will pick for this workload, from the per-device dispatch
+    capacity (same ceil-to-8 rule as ``moe.capacity``)."""
+    if knob == 1 or not cfg.is_moe:
+        return 1
+    t_loc = max(w.tokens(phase) // max(n_devices // e.tp, 1), 1)
+    c = np.ceil(t_loc * cfg.top_k / cfg.n_routed_experts
+                * cfg.capacity_factor)
+    c_loc = max(8, int(np.ceil(c / 8) * 8))
+    if knob >= 2:
+        return min(knob, c_loc)
+    if e.ep <= 1:
+        return 1
+    for k in (4, 2):
+        if c_loc >= 8 * k:
+            return k
+    return 1
+
+
 @dataclasses.dataclass
 class ModuleCosts:
     """Per-layer latencies for one (attention, expert) strategy pair."""
@@ -260,17 +301,27 @@ class InferenceSimulator:
         return len(degrees) / float(sum(degrees))
 
     def comm_time(self, w: Workload, phase: str, a: AttnStrategy,
-                  e: ExpertStrategy) -> float:
+                  e: ExpertStrategy, pipeline_chunks: int = 1) -> float:
+        """Per-layer comm time; ``pipeline_chunks`` > 1 applies the EP
+        micro-batch overlap model (``overlapped_comm``) — the all2all
+        hides behind the expert FFN it pipelines against, so only the
+        exposed remainder reaches the ILP's comm term."""
         v = comm_mod.layer_comm_bytes(self.cfg, w, phase, a, e, self.n)
         if v <= 0:
             return 0.0
-        return float(self.model.predict_comm([v])[0])
+        t = float(self.model.predict_comm([v])[0])
+        if pipeline_chunks > 1 and e.ep > 1:
+            t = overlapped_comm(t, self.expert_time(w, phase, e),
+                                pipeline_chunks)
+        return t
 
     def layer_costs(self, w: Workload, phase: str, a: AttnStrategy,
-                    e: ExpertStrategy) -> ModuleCosts:
+                    e: ExpertStrategy,
+                    pipeline_chunks: int = 1) -> ModuleCosts:
         return ModuleCosts(self.attn_time(w, phase, a),
                            self.expert_time(w, phase, e),
-                           self.comm_time(w, phase, a, e))
+                           self.comm_time(w, phase, a, e,
+                                          pipeline_chunks=pipeline_chunks))
 
     # -- evaluation-facing (ground truth, with noise) -------------------------
     def true_layer_time(self, w: Workload, phase: str, a: AttnStrategy,

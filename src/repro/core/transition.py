@@ -64,11 +64,22 @@ def layout_overlap(e_from: ExpertStrategy, e_to: ExpertStrategy) -> float:
 def transition_costs(cfg: ModelConfig, w: Workload, chip: ChipSpec,
                      n_devices: int, e_from: ExpertStrategy,
                      e_to: ExpertStrategy, t_layer_prefill: float,
-                     gt: Optional[GroundTruth] = None) -> TransitionCosts:
-    """All Eq.-6 terms for one layer's expert weights."""
+                     gt: Optional[GroundTruth] = None,
+                     async_restore: bool = True) -> TransitionCosts:
+    """All Eq.-6 terms for one layer's expert weights.
+
+    ``async_restore`` models the executor the engine actually runs: the
+    INT4 restore happens on a background thread kicked off at plan-switch
+    decision time, so the upload/dequant pipelines against the next
+    prefill and ``t_overlap`` is the layer's prefill window (Fig. 3).
+    ``async_restore=False`` prices the blocking executor — the restore
+    serializes with compute, so the overlap term is zero and ``c_ij``
+    grows to the full upload+dequant cost.
+    """
     gt = gt or GroundTruth(chip)
+    t_overlap = t_layer_prefill if async_restore else 0.0
     if e_from == e_to:
-        return TransitionCosts(0.0, 0.0, 0.0, t_layer_prefill)
+        return TransitionCosts(0.0, 0.0, 0.0, t_overlap)
     wb = expert_weight_bytes(cfg, w.dtype_bytes)       # one layer, global
     shard = wb / n_devices
     missing = shard * (1.0 - layout_overlap(e_from, e_to))
@@ -76,16 +87,18 @@ def transition_costs(cfg: ModelConfig, w: Workload, chip: ChipSpec,
     n_params_shard = (wb / w.dtype_bytes) / n_devices
     t_upload = gt.h2d_time(n_params_shard * INT4_BYTES_PER_PARAM)
     t_dequant = gt.dequant_time(n_params_shard)
-    return TransitionCosts(t_reshard, t_upload, t_dequant, t_layer_prefill)
+    return TransitionCosts(t_reshard, t_upload, t_dequant, t_overlap)
 
 
 def switching_matrix(cfg: ModelConfig, w: Workload, chip: ChipSpec,
                      n_devices: int, strategies, t_layer_prefill,
-                     gt: Optional[GroundTruth] = None) -> np.ndarray:
+                     gt: Optional[GroundTruth] = None,
+                     async_restore: bool = True) -> np.ndarray:
     """The paper's C matrix: C[i, j] = per-MODEL switching cost i -> j.
 
     t_layer_prefill may be a vector (per prefill strategy i) — the overlap
     window is the prefill compute of the layer being replaced.
+    ``async_restore`` passes through to ``transition_costs``.
     """
     K = len(strategies)
     C = np.zeros((K, K))
@@ -95,7 +108,8 @@ def switching_matrix(cfg: ModelConfig, w: Workload, chip: ChipSpec,
             if i == j:
                 continue
             tc = transition_costs(cfg, w, chip, n_devices, ei, ej,
-                                  float(t_vec[i]), gt)
+                                  float(t_vec[i]), gt,
+                                  async_restore=async_restore)
             C[i, j] = tc.c_ij * cfg.num_layers
     return C
 
@@ -105,13 +119,39 @@ def switching_matrix(cfg: ModelConfig, w: Workload, chip: ChipSpec,
 # ---------------------------------------------------------------------------
 class TransitionExecutor:
     """Keeps INT4 per-group host backups of expert weights and materializes
-    them under a new sharding, or reshards device arrays directly."""
+    them under a new sharding, or reshards device arrays directly.
+
+    ``restore_async``/``restore_packed_async`` run the same host work
+    (dequant + upload) on a single background worker thread and return a
+    ``concurrent.futures.Future`` — the serving engine kicks them off at
+    plan-switch decision time so the restore overlaps the next batch's
+    prefill (the Eq.-6 ``t_overlap`` term made real), then joins the
+    future as the completion barrier before the first step that needs
+    the restored leaves. One worker on purpose: restores stay ordered,
+    and the host dequant is numpy-bound anyway.
+    """
 
     def __init__(self, group_size: int = 128):
         from . import quantization as q
         self._q = q
         self.group_size = group_size
         self._backups: Dict[str, object] = {}
+        self._pool = None
+
+    def _executor(self):
+        if self._pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="tx-restore")
+        return self._pool
+
+    def restore_async(self, name: str, sharding=None, dtype=None):
+        """``restore`` on the background worker; returns a Future."""
+        return self._executor().submit(self.restore, name, sharding, dtype)
+
+    def restore_packed_async(self, name: str, sharding=None):
+        """``restore_packed`` on the background worker; returns a Future."""
+        return self._executor().submit(self.restore_packed, name, sharding)
 
     def backup(self, name: str, w) -> None:
         import numpy as np

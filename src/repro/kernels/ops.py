@@ -702,6 +702,41 @@ def grouped_matmul(
     return fn(lhs, rhs)
 
 
+def pipelined_ep_ffn(buf: jax.Array, ffn: Callable[[jax.Array], jax.Array],
+                     *, ep_axis: str, chunks: int) -> jax.Array:
+    """Micro-batch-pipelined EP exchange + expert FFN (the EPS-MoE
+    schedule, DESIGN.md §4e). Must be called INSIDE an EP shard_map.
+
+    ``buf`` is this device's (S, C, d) dispatch buffer; ``ffn`` maps an
+    exchanged (S/ep, c*ep, d) slab to its expert outputs. The capacity
+    dim is split into ``chunks`` slabs, each running the same
+    dispatch-all2all -> FFN -> combine-all2all chain as the serial path
+    — but the slabs carry no data dependence on one another, so slab
+    i+1's dispatch ``all_to_all`` issues while slab i's FFN occupies the
+    compute units and slab i's combine exchange overlaps slab i+1's FFN
+    (double-buffering falls out of the dependence structure; XLA's async
+    collectives do the buffering). Token-exact with the serial path:
+    routing and capacity assignment happened *before* the split, the
+    FFN is row-independent, and the concat restores the capacity order.
+    """
+    K = min(max(int(chunks), 1), buf.shape[1])
+
+    def exchange(x, split, concat):
+        return jax.lax.all_to_all(x, ep_axis, split_axis=split,
+                                  concat_axis=concat, tiled=True)
+
+    if K <= 1:
+        _record("moe.ep_serial")
+        return exchange(ffn(exchange(buf, 0, 1)), 1, 0)
+    _record(f"moe.ep_pipeline_k{K}")
+    # near-equal slabs; capacity need not divide K (first slabs one wider)
+    bounds = [(i * buf.shape[1]) // K for i in range(K + 1)]
+    slabs = [buf[:, bounds[i]:bounds[i + 1]] for i in range(K)]
+    sent = [exchange(s, 0, 1) for s in slabs]
+    outs = [exchange(ffn(s), 1, 0) for s in sent]
+    return jnp.concatenate(outs, axis=1)
+
+
 def int4_dequant(
     packed,
     scales,

@@ -94,6 +94,15 @@ def main() -> None:
                          "Eq.-6 transition path")
     ap.add_argument("--rebalance-interval", type=int, default=32,
                     help="decode steps between replication re-plans")
+    ap.add_argument("--moe-pipeline", type=int, default=0,
+                    help="EP micro-batch pipeline depth K: the dispatch "
+                         "buffer splits into K capacity chunks so each "
+                         "chunk's all_to_all overlaps the previous chunk's "
+                         "expert FFN (0 = auto from capacity, 1 = serial)")
+    ap.add_argument("--no-async-transitions", action="store_true",
+                    help="block on INT4 expert restores instead of running "
+                         "them on the background worker overlapped with "
+                         "prefill")
     args = ap.parse_args()
     logging.basicConfig(
         level=logging.INFO, format="%(name)s: %(message)s")
@@ -138,6 +147,8 @@ def main() -> None:
                             resident_int4=args.resident_int4,
                             replicate_experts=args.replicate_experts,
                             rebalance_interval=args.rebalance_interval,
+                            moe_pipeline=args.moe_pipeline,
+                            async_transitions=not args.no_async_transitions,
                             kernel_backend=None if args.kernel_backend == "auto"
                             else args.kernel_backend)
     rng = np.random.default_rng(0)
@@ -167,6 +178,10 @@ def main() -> None:
     print(f"plan changes: {st.replans} (strategy switches "
           f"{st.plan_switches}, cache hits {st.cache_hits}), "
           f"transition total {st.transition_ms_total:.1f} ms")
+    if st.async_restores:
+        print(f"async restore: {st.async_restores} kicked, "
+              f"{st.restore_overlap_ms:.1f} ms overlapped prefill, "
+              f"{st.restore_wait_ms:.1f} ms exposed at the barrier")
     if args.resident_int4:
         print(f"resident INT4 experts: "
               f"{st.resident_bytes_saved / 2**20:.2f} MiB residency freed")

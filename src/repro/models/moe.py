@@ -49,6 +49,30 @@ def capacity(num_tokens: int, cfg: ModelConfig) -> int:
     return max(8, int(math.ceil(c / 8) * 8))
 
 
+def pipeline_chunks(C_loc: int, ep_size: int, knob: int = 0) -> int:
+    """Resolve the EP pipeline depth K for a local capacity ``C_loc``.
+
+    ``knob`` is ``ShardingPlan.moe_pipeline``: 1 pins the serial path,
+    K>=2 forces that many capacity slabs (clamped to C_loc so no slab is
+    empty), and 0 picks automatically — the deepest K in {4, 2} whose
+    slabs keep the 8-row capacity granule (``capacity`` rounds C to
+    multiples of 8; thinner slabs just add exchange launches without
+    compute to hide them behind), serial when there is no all_to_all to
+    overlap (ep_size 1). The latency model mirrors this rule
+    (``latency.ep_pipeline_chunks``) so the ILP prices what runs.
+    """
+    if knob == 1:
+        return 1
+    if knob >= 2:
+        return min(knob, max(C_loc, 1))
+    if ep_size <= 1:
+        return 1
+    for k in (4, 2):
+        if C_loc >= 8 * k:
+            return k
+    return 1
+
+
 def route(x_flat: jax.Array, router_w: jax.Array, cfg: ModelConfig):
     """Top-k routing. x_flat: (T, d) -> gates (T,k), idx (T,k), aux_loss."""
     logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
@@ -240,15 +264,19 @@ def _moe_ep_shardmap(x_flat, moe_p, cfg: ModelConfig, plan, backend=None):
             fe, pe = replica_coords(fe, pe, rep)
             keep = pe < C_loc
         buf, _ = dispatch(xl, fe, pe, n_slots, C_loc)     # (S, C_loc, d)
-        # exchange: every device sends S/ep slot-slabs to each peer
-        buf = jax.lax.all_to_all(buf, ep_ax, split_axis=0, concat_axis=1,
-                                 tiled=True)              # (S/ep, C_loc*ep, d)
-        # already inside the EP shard_map: slabs are device-local, so the
-        # grouped kernel runs directly on them (plan=None at the seam)
-        y_buf = expert_ffn(buf, wig_l, wiu_l, wo_l, cfg.activation,
-                           backend=backend)
-        y_buf = jax.lax.all_to_all(y_buf, ep_ax, split_axis=1, concat_axis=0,
-                                   tiled=True)            # (S, C_loc, d)
+        # exchange + expert FFN, micro-batch pipelined over K capacity
+        # slabs (each slab: dispatch all_to_all -> grouped FFN -> combine
+        # all_to_all, slab i+1's exchange overlapping slab i's compute).
+        # Routing and capacity were assigned on the FULL local batch
+        # above, so K only reshapes the schedule, never the semantics.
+        # Already inside the EP shard_map: slabs are device-local, so the
+        # grouped kernel runs directly on them (plan=None at the seam).
+        K = pipeline_chunks(C_loc, ep_size, plan.moe_pipeline)
+        y_buf = kernel_ops.pipelined_ep_ffn(
+            buf,
+            lambda b: expert_ffn(b, wig_l, wiu_l, wo_l, cfg.activation,
+                                 backend=backend),
+            ep_axis=ep_ax, chunks=K)                      # (S, C_loc, d)
         y = combine(y_buf, fe, pe, keep, fg, T_loc)
         return y, jax.lax.pmean(aux, ep_ax), idx
 

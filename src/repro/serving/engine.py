@@ -134,6 +134,10 @@ class EngineStats:
     resident_bytes_saved: int = 0  # dense-minus-packed expert residency delta
     routing_steps: int = 0  # decode steps whose router top-k fed the tracker
     replication_rebalances: int = 0  # replica-set changes applied online
+    # async INT4 restore (overlap accounting; zeros with it off):
+    async_restores: int = 0  # background restores kicked at decision time
+    restore_wait_ms: float = 0.0  # residual barrier wait (the exposed cost)
+    restore_overlap_ms: float = 0.0  # kick->barrier window hidden by prefill
 
 
 @dataclasses.dataclass
@@ -220,6 +224,8 @@ class InferenceEngine:
         replicate_experts: int = 0,
         rebalance_interval: int = 32,
         routing_ema: float = 0.9,
+        moe_pipeline: int = 0,
+        async_transitions: bool = True,
     ):
         self.cfg = cfg
         self.params = params
@@ -262,6 +268,14 @@ class InferenceEngine:
         # a previous batch's layout to transition away from.
         self._plan_ran = False
         self._tx = TransitionExecutor()
+        # EP micro-batch pipeline depth overlaid on every active plan
+        # (0 = follow the plan / auto, 1 = force serial, K>=2 = force K)
+        self.moe_pipeline = int(moe_pipeline)
+        # async INT4 restore: kick the host dequant+upload onto the
+        # TransitionExecutor worker at plan-activation time so it overlaps
+        # the batch's prefill; transition_expert_layout() is the barrier
+        self.async_transitions = bool(async_transitions)
+        self._pending_restore: Optional[tuple] = None
         if use_int4_transition and cfg.is_moe:
             self._backup_experts()
         # resident-INT4 expert serving: quantize the expert FFN leaves once
@@ -374,10 +388,14 @@ class InferenceEngine:
             and self.session.mesh is not None
             and self.hap_plan is not None
         ):
-            return self._with_replication(
-                self.hap_plan.to_sharding_plan(self.session.mesh, self.cfg, phase=phase)
+            return self._with_pipeline(
+                self._with_replication(
+                    self.hap_plan.to_sharding_plan(
+                        self.session.mesh, self.cfg, phase=phase
+                    )
+                )
             )
-        return self._with_replication(self.plan)
+        return self._with_pipeline(self._with_replication(self.plan))
 
     def _with_replication(self, plan):
         if self._replication is None:
@@ -386,6 +404,17 @@ class InferenceEngine:
         if base.replication == self._replication:
             return base
         return dataclasses.replace(base, replication=self._replication)
+
+    def _with_pipeline(self, plan):
+        """Overlay the engine's EP pipeline knob onto a plan. 0 leaves the
+        plan's own ``moe_pipeline`` (auto by default); a forced K is part
+        of the plan so it keys the jit cache like any layout choice."""
+        if not self.moe_pipeline:
+            return plan
+        base = plan if plan is not None else NULL_PLAN
+        if base.moe_pipeline == self.moe_pipeline:
+            return base
+        return dataclasses.replace(base, moe_pipeline=self.moe_pipeline)
 
     # -- transition machinery --------------------------------------------
     def _expert_leaves(self) -> Dict[str, Any]:
@@ -468,6 +497,9 @@ class InferenceEngine:
         """
         if not self.cfg.is_moe or not self._expert_leaves():
             return 0.0
+        # a sync relayout supersedes any in-flight background restore —
+        # drain it (never install) so leaves can't tear across layouts
+        self._drop_pending_restore()
         t0 = time.perf_counter()
         shardings: Dict[str, Any] = {}
         if sharding_plan is not None and not getattr(sharding_plan, "is_null", True):
@@ -521,10 +553,106 @@ class InferenceEngine:
             )
         return "int4_upload" if self.use_int4_transition else "reshard"
 
+    # -- async INT4 restore (overlap with prefill) -------------------------
+    def _drop_pending_restore(self) -> None:
+        """Drain an in-flight background restore without installing it."""
+        if self._pending_restore is None:
+            return
+        _, _, futures, _ = self._pending_restore
+        self._pending_restore = None
+        for f in futures.values():
+            f.result()
+
+    def _begin_async_restore(self, phase: str = "decode") -> None:
+        """Kick the INT4 expert restore for ``phase`` onto the background
+        worker, at plan-switch decision time. The host dequant + device
+        upload then overlap the batch's prefill; ``transition_expert_layout``
+        joins the futures as the completion barrier, so no step ever sees
+        half-restored leaves. No-op unless the active plan switches expert
+        layouts via the int4_upload mechanism."""
+        if not self.async_transitions:
+            return
+        if self.hap_plan is None or not self.hap_plan.switches:
+            return
+        if self._plan_mechanism() != "int4_upload":
+            return
+        if not self.cfg.is_moe or not self._expert_leaves():
+            return
+        sharding_plan = self._sharding_for(phase)
+        if self._pending_restore is not None:
+            p_phase, p_plan, _, _ = self._pending_restore
+            if p_phase == phase and p_plan == sharding_plan:
+                return  # the right restore is already in flight
+            self._drop_pending_restore()
+        shardings: Dict[str, Any] = {}
+        if sharding_plan is not None and not getattr(sharding_plan, "is_null", True):
+            from repro.models.params import param_pspecs
+
+            pspecs = param_pspecs(self.cfg, sharding_plan)["layers"]["moe"]
+            shardings = {
+                n: sharding_plan.sharding(pspecs[n]) for n in _EXPERT_LEAVES
+            }
+        q_shardings = (
+            self._quantized_shardings(sharding_plan) if self.resident_int4 else {}
+        )
+        moe = self.params["layers"]["moe"]
+        futures: Dict[str, Any] = {}
+        for name in _EXPERT_LEAVES:
+            key = f"moe/{name}"
+            if self.resident_int4:
+                futures[name] = self._tx.restore_packed_async(
+                    key, sharding=q_shardings.get(name)
+                )
+            else:
+                if key not in self._tx._backups:
+                    self._tx.backup(key, moe[name])
+                futures[name] = self._tx.restore_async(
+                    key, sharding=shardings.get(name), dtype=moe[name].dtype
+                )
+        self._pending_restore = (phase, sharding_plan, futures, time.perf_counter())
+        self.stats.async_restores += 1
+
+    def _join_async_restore(self, phase: str) -> Optional[float]:
+        """Completion barrier for a kicked restore: wait out the futures,
+        install every restored leaf atomically, and return the *exposed*
+        wait ms. Returns None when nothing usable is pending — including
+        a restore whose target layout no longer matches (the plan moved
+        between kick and join); that one is drained and discarded, and
+        the caller falls back to the sync path. Torn weights are
+        impossible: nothing lands in ``self.params`` until every future
+        has resolved, and stale results never land at all."""
+        pending = self._pending_restore
+        if pending is None:
+            return None
+        self._pending_restore = None
+        p_phase, p_plan, futures, t_kick = pending
+        t0 = time.perf_counter()
+        results = {n: f.result() for n, f in futures.items()}
+        wait_ms = (time.perf_counter() - t0) * 1e3
+        if p_phase != phase or p_plan != self._sharding_for(phase):
+            log.info("async restore discarded: target layout changed in flight")
+            return None
+        moe = dict(self.params["layers"]["moe"])
+        moe.update(results)
+        layers = dict(self.params["layers"])
+        layers["moe"] = moe
+        self.params = dict(self.params, layers=layers)
+        self.stats.restore_wait_ms += wait_ms
+        self.stats.restore_overlap_ms += (t0 - t_kick) * 1e3
+        return wait_ms
+
     def transition_expert_layout(self) -> float:
-        """Execute the prefill->decode expert-layout switch; returns ms."""
+        """Execute the prefill->decode expert-layout switch; returns ms.
+
+        When an async restore is in flight for the decode layout this is
+        its completion barrier — the returned ms is only the residual
+        wait, the rest having overlapped prefill. Otherwise (or when the
+        pending restore went stale) the switch runs synchronously."""
         if self.hap_plan is None or not self.hap_plan.switches:
             return 0.0
+        ms = self._join_async_restore("decode")
+        if ms is not None:
+            return ms
         return self._relayout_experts(
             self._plan_mechanism(), self._sharding_for("decode")
         )
@@ -687,6 +815,9 @@ class InferenceEngine:
         if self.session is not None:
             inter_ms = self._activate_plan(Workload(batch=B, prompt=S, gen=max_new))
         self._plan_ran = True
+        # plan decided: kick the decode-layout INT4 restore onto the
+        # background worker so it overlaps this batch's prefill
+        self._begin_async_restore("decode")
         prefill_fn = self._prefill_fn(self._sharding_for("prefill"))
 
         t0 = time.perf_counter()
@@ -945,6 +1076,7 @@ class InferenceEngine:
             return
 
         inter_ms = self._replan_on_join()
+        self._begin_async_restore("decode")
 
         # prefill alone at this request's own bucket (B=1: a bounded set
         # of prefill shapes, and numerics identical to a solo run)

@@ -151,6 +151,13 @@ class ShardingPlan:
     # plan change, so the engine's jit cache and transition machinery
     # treat a rebalance exactly like any other plan switch.
     replication: Optional[ExpertReplication] = None
+    # EP micro-batch pipelining (EPS-MoE style): the dispatch buffer is
+    # split into K capacity chunks so each chunk's all_to_all overlaps
+    # the previous chunk's expert FFN (models/moe.py). 0 = auto (pick K
+    # from the capacity), 1 = serial, K>=2 = forced chunk count. Part of
+    # the frozen plan because a different K is a different traced
+    # program (jit cache key), like every other layout choice.
+    moe_pipeline: int = 0
 
     # ---------------------------------------------------------------
     @property

@@ -1,0 +1,193 @@
+"""Async INT4 expert restore: the host dequant + device upload runs on
+the TransitionExecutor's background worker, kicked at plan-activation
+time, and ``transition_expert_layout`` is the completion barrier — no
+step may ever see half-restored ("torn") expert leaves, and greedy
+tokens must match the blocking executor exactly (the INT4 round trip is
+deterministic either way)."""
+import threading
+import time
+
+import jax
+import pytest
+
+from conftest import reduced
+from repro.core.hap import fixed_plan
+from repro.core.strategy import ExpertStrategy
+from repro.core.transition import TransitionExecutor, transition_costs
+from repro.models import init_params
+from repro.serving import InferenceEngine, Request
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _switching_engine(cfg, params, **kw):
+    # prefill TP2, decode EP2 -> plan.switches; on the null mesh both
+    # layouts are the identity, so only the INT4 round trip matters
+    plan = fixed_plan("TP1", "TP2", "EP2", mechanism="int4_upload")
+    return InferenceEngine(cfg, params, max_batch=2, hap_plan=plan,
+                           use_int4_transition=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# executor-level async API
+# ---------------------------------------------------------------------------
+def test_restore_async_matches_sync(rng):
+    import numpy as np
+    tx = TransitionExecutor()
+    w = jax.random.normal(rng, (4, 8, 16))
+    tx.backup("w", w)
+    sync = tx.restore("w", dtype=w.dtype)
+    futy = tx.restore_async("w", dtype=w.dtype)
+    np.testing.assert_array_equal(np.asarray(futy.result()),
+                                  np.asarray(sync))
+
+
+def test_restore_packed_async_matches_sync(rng):
+    import numpy as np
+    tx = TransitionExecutor()
+    w = jax.random.normal(rng, (4, 8, 128))
+    tx.backup_packed("w", w)
+    sync = tx.restore_packed("w")
+    got = tx.restore_packed_async("w").result()
+    np.testing.assert_array_equal(np.asarray(got.packed),
+                                  np.asarray(sync.packed))
+    np.testing.assert_array_equal(np.asarray(got.scales),
+                                  np.asarray(sync.scales))
+
+
+# ---------------------------------------------------------------------------
+# engine: token-exactness and overlap accounting
+# ---------------------------------------------------------------------------
+def test_async_restore_token_exact_vs_blocking(moe_setup):
+    cfg, params = moe_setup
+    prompts = ([1, 2, 3, 4], [5, 6, 7, 8, 9, 10])
+
+    def run(**kw):
+        eng = _switching_engine(cfg, params, **kw)
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=8))
+        return eng, [c.tokens for c in eng.run()]
+
+    eng_sync, toks_sync = run(async_transitions=False)
+    eng_async, toks_async = run(async_transitions=True)
+    assert toks_async == toks_sync
+    assert eng_sync.stats.async_restores == 0
+    assert eng_async.stats.async_restores >= 1
+    # the kick->barrier window overlapped prefill
+    assert eng_async.stats.restore_overlap_ms > 0.0
+
+
+def test_async_restore_token_exact_resident_int4(moe_setup):
+    cfg, params = moe_setup
+
+    def run(async_on):
+        eng = _switching_engine(cfg, params, resident_int4=True,
+                                async_transitions=async_on)
+        eng.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=6))
+        return [c.tokens for c in eng.run()]
+
+    assert run(True) == run(False)
+
+
+def test_no_torn_weights_until_barrier(moe_setup):
+    """The kick must not touch ``params``; the barrier installs every
+    leaf at once."""
+    cfg, params = moe_setup
+    eng = _switching_engine(cfg, params)
+    before = eng.params["layers"]["moe"]
+    eng._begin_async_restore("decode")
+    assert eng._pending_restore is not None
+    assert eng.stats.async_restores == 1
+    # nothing installed yet — the leaves are the same objects
+    assert eng.params["layers"]["moe"] is before
+    ms = eng.transition_expert_layout()
+    assert ms >= 0.0
+    assert eng._pending_restore is None
+    after = eng.params["layers"]["moe"]
+    assert all(after[n] is not before[n] for n in ("wi_gate", "wi_up", "wo"))
+
+
+def test_restore_completes_before_first_decode_step(moe_setup):
+    """Event ordering: slow every background restore down, then assert
+    the decode entry point is only built after all three expert leaves
+    resolved — the barrier really is a barrier."""
+    cfg, params = moe_setup
+    eng = _switching_engine(cfg, params)
+    restored = []
+    orig_restore = eng._tx.restore
+
+    def slow_restore(name, sharding=None, dtype=None):
+        time.sleep(0.02)
+        out = orig_restore(name, sharding, dtype)
+        restored.append(name)
+        return out
+
+    eng._tx.restore = slow_restore
+    seen_at_decode = []
+    orig_decode_fn = eng._decode_fn
+
+    def spy_decode_fn(plan):
+        seen_at_decode.append(len(restored))
+        return orig_decode_fn(plan)
+
+    eng._decode_fn = spy_decode_fn
+    eng.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=4))
+    out = eng.run()
+    assert len(out) == 1 and len(out[0].tokens) == 4
+    assert eng.stats.async_restores >= 1
+    # every decode-fn fetch happened with all 3 leaves restored
+    assert seen_at_decode and all(n == 3 for n in seen_at_decode)
+
+
+def test_sync_relayout_drains_stale_pending(moe_setup):
+    """A sync relayout supersedes an in-flight restore: the pending
+    futures drain without installing, and the engine stays consistent."""
+    cfg, params = moe_setup
+    eng = _switching_engine(cfg, params)
+    eng._begin_async_restore("decode")
+    assert eng._pending_restore is not None
+    eng._relayout_experts("reshard", eng._sharding_for("prefill"))
+    assert eng._pending_restore is None
+    # a later barrier has nothing pending and falls back to sync
+    ms = eng.transition_expert_layout()
+    assert ms >= 0.0
+
+
+def test_kick_noop_without_int4_switch(moe_setup):
+    cfg, params = moe_setup
+    # non-switching plan: nothing to restore
+    eng = InferenceEngine(cfg, params, max_batch=1,
+                          hap_plan=fixed_plan("TP1", "TP2"),
+                          use_int4_transition=True)
+    eng._begin_async_restore("decode")
+    assert eng._pending_restore is None and eng.stats.async_restores == 0
+    # switching plan but reshard mechanism: also a no-op
+    eng2 = InferenceEngine(cfg, params, max_batch=1,
+                           hap_plan=fixed_plan("TP1", "TP2", "EP2"),
+                           use_int4_transition=False)
+    eng2._begin_async_restore("decode")
+    assert eng2._pending_restore is None and eng2.stats.async_restores == 0
+
+
+# ---------------------------------------------------------------------------
+# cost model: the blocking executor loses the Eq.-6 overlap term
+# ---------------------------------------------------------------------------
+def test_blocking_restore_prices_no_overlap():
+    from repro.core.flops import Workload
+    from repro.core.hardware import get_chip
+    cfg = reduced("deepseek-moe-16b")
+    w = Workload(batch=4, prompt=512, gen=64)
+    e_from, e_to = ExpertStrategy(tp=1, ep=4), ExpertStrategy(tp=4, ep=1)
+    chip = get_chip("a6000")
+    asy = transition_costs(cfg, w, chip, 4, e_from, e_to,
+                           t_layer_prefill=0.005)
+    blk = transition_costs(cfg, w, chip, 4, e_from, e_to,
+                           t_layer_prefill=0.005, async_restore=False)
+    assert asy.t_overlap == pytest.approx(0.005)
+    assert blk.t_overlap == 0.0
+    assert blk.c_ij >= asy.c_ij

@@ -25,6 +25,7 @@ def _load_bench_module(name):
 
 check_regression = _load_bench_module("check_regression")
 bench_trajectory = _load_bench_module("bench_trajectory")
+baseline_schema = _load_bench_module("check_baseline_schema")
 
 
 def _baseline(**metrics):
@@ -205,6 +206,120 @@ def test_trajectory_main_roundtrip(tmp_path, monkeypatch, capsys):
     traj = json.loads(out.read_text())
     assert [e["run_id"] for e in traj["history"]] == ["1", "2"]
     assert "Bench trajectory" in capsys.readouterr().out
+
+
+def test_trajectory_finds_prev_in_nested_artifact_dir(tmp_path):
+    """``gh run download`` layouts vary: the previous trajectory may sit
+    under a nested subdirectory; missing/empty/corrupt prev dirs all
+    start fresh history instead of failing."""
+    # missing prev dir
+    assert bench_trajectory.find_prev_trajectory(
+        str(tmp_path / "nope")) == {}
+    # empty prev dir
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert bench_trajectory.find_prev_trajectory(str(empty)) == {}
+    # corrupt file -> fresh start, not a crash
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "BENCH_trajectory.json").write_text("{not json")
+    assert bench_trajectory.find_prev_trajectory(str(bad)) == {}
+    # nested artifact layout
+    nested = tmp_path / "prev" / "bench-smoke"
+    nested.mkdir(parents=True)
+    traj = {"history": [{"run_id": "9"}]}
+    (nested / "BENCH_trajectory.json").write_text(json.dumps(traj))
+    assert bench_trajectory.find_prev_trajectory(
+        str(tmp_path / "prev")) == traj
+    # a direct hit wins over nested copies
+    (tmp_path / "prev" / "BENCH_trajectory.json").write_text(
+        json.dumps({"history": [{"run_id": "top"}]}))
+    got = bench_trajectory.find_prev_trajectory(str(tmp_path / "prev"))
+    assert got["history"][0]["run_id"] == "top"
+
+
+def test_trajectory_snapshot_reads_overlap_artifact(tmp_path):
+    (tmp_path / "BENCH_overlap.json").write_text(json.dumps(
+        {"overlap": {"overlap_tok_per_s": 480.0, "speedup": 1.02,
+                     "overlap_exact": True, "async_restores": 24}}))
+    snap = bench_trajectory.snapshot(str(tmp_path))
+    assert snap["overlap_speedup"] == 1.02
+    assert snap["overlap_tok_per_s"] == 480.0
+    assert snap["overlap_exact"] is True
+    assert snap["async_restores"] == 24
+    table = bench_trajectory.markdown_table(
+        [dict(snap, run_id="1", commit="0123456789ab")])
+    assert "ovl x" in table and "1.02" in table
+
+
+# ---------------------------------------------------------------------------
+# baseline schema linter (benchmarks/check_baseline_schema.py)
+# ---------------------------------------------------------------------------
+def test_schema_accepts_every_gate_shape():
+    ok = {
+        "metrics": {
+            "a.ceiling": {"max_value": 0.01},
+            "a.flag": {"value": True},
+            "a.default_tol": {"value": 1.5},
+            "a.ratio": {"value": 1.2, "max_regression": 0.15},
+            "a.walltime": {"value": 100.0, "max_increase": 4.0},
+        },
+        "suites": {"s": {"metrics": {"b.x": {"value": 1.0}}}},
+    }
+    assert baseline_schema.check_baseline(ok) == []
+
+
+def test_schema_rejects_malformed_entries():
+    def errs(spec):
+        return baseline_schema.check_entry("m", spec)
+
+    assert errs({"typo_key": 1.0})                       # unknown key
+    assert errs({})                                      # no gate at all
+    assert errs({"value": "fast"})                       # non-numeric
+    assert errs({"max_value": True})                     # bool ceiling
+    assert errs({"max_value": 0.01, "value": 1.0})       # contradictory
+    assert errs({"value": True, "max_regression": 0.1})  # bool is exact
+    assert errs({"value": 1.0, "max_regression": -0.1})  # negative tol
+    assert errs({"value": 1.0, "max_regression": 0.1,
+                 "max_increase": 0.1})                   # both directions
+    assert errs(1.0)                                     # not an object
+    # well-formed shapes produce no errors
+    assert not errs({"value": 1.0, "max_regression": 0.0})
+    assert not errs({"max_value": 1e-5})
+
+
+def test_schema_rejects_dead_and_empty_suites():
+    errs = baseline_schema.check_baseline(
+        {"metrics": {}, "suites": {"empty": {"metrics": {}},
+                                   "broken": {"no_metrics": 1}}})
+    assert any("empty" in e for e in errs)
+    assert any("broken" in e for e in errs)
+
+
+def test_schema_workflow_cross_check():
+    wf = ("run: >\n  python benchmarks/check_regression.py B.json\n"
+          "  --baseline benchmarks/baseline.json --suite kern\n")
+    base = {"metrics": {}, "suites": {"kern": {"metrics": {
+        "k.x": {"value": 1.0}}}}}
+    assert baseline_schema.cross_check(base, wf) == []
+    # suite gated by the workflow but missing from the baseline
+    missing = baseline_schema.cross_check({"metrics": {}, "suites": {}}, wf)
+    assert any("no such suite" in e for e in missing)
+    # baseline suite nobody gates
+    dead = baseline_schema.cross_check(base, "run: echo hi\n")
+    assert any("dead gate" in e for e in dead)
+
+
+def test_schema_passes_on_committed_baseline_and_workflow():
+    """The real baseline.json and ci.yml must satisfy the linter — this
+    is the same check the workflow-lint job runs."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    with open(os.path.join(root, "benchmarks", "baseline.json")) as f:
+        baseline = json.load(f)
+    assert baseline_schema.check_baseline(baseline) == []
+    wf_path = os.path.join(root, ".github", "workflows", "ci.yml")
+    with open(wf_path) as f:
+        assert baseline_schema.cross_check(baseline, f.read()) == []
 
 
 def test_main_exit_code(tmp_path, monkeypatch, capsys):
