@@ -37,6 +37,7 @@ COLUMNS = (
     ("cont x", "continuous_speedup", "{:.2f}"),
     ("prefix x", "prefix_speedup", "{:.2f}"),
     ("ovl x", "overlap_speedup", "{:.2f}"),
+    ("pf x", "prefetch_speedup", "{:.2f}"),
     ("int4 tok/s", "int4_tok_per_s", "{:.0f}"),
     ("int4 rel", "int4_relative", "{:.2f}"),
     ("gmm int4 err", "gmm_int4_max_err", "{:.1e}"),
@@ -94,9 +95,11 @@ def snapshot(current_dir: str) -> dict:
     ri = _load(os.path.join(current_dir, "BENCH_resident_int4.json"))
     kb = _load(os.path.join(current_dir, "BENCH_kernel_bench.json"))
     ov = _load(os.path.join(current_dir, "BENCH_overlap.json"))
+    pf = _load(os.path.join(current_dir, "BENCH_prefetch.json"))
     h2h = smoke.get("continuous_vs_static", {})
     r = ri.get("resident_int4", {})
     o = ov.get("overlap", {})
+    p = pf.get("prefetch", {})
     return {
         "static_tok_per_s": h2h.get("static_tok_per_s"),
         "continuous_tok_per_s": h2h.get("continuous_tok_per_s"),
@@ -107,6 +110,10 @@ def snapshot(current_dir: str) -> dict:
         "overlap_speedup": o.get("speedup"),
         "overlap_exact": o.get("overlap_exact"),
         "async_restores": o.get("async_restores"),
+        "prefetch_tok_per_s": p.get("prefetch_tok_per_s"),
+        "prefetch_speedup": p.get("speedup"),
+        "prefetch_exact": p.get("prefetch_exact"),
+        "prefetch_hit_rate": p.get("hit_rate"),
         "int4_tok_per_s": r.get("int4_tok_per_s"),
         "int4_relative": r.get("relative_tok_per_s"),
         "max_experts_int4": r.get("max_experts_int4"),

@@ -201,3 +201,64 @@ def replication_degrees(freqs: Sequence[float], extra_replicas: int,
             break
         degrees[e] += 1
     return tuple(int(d) for d in degrees)
+
+
+def searched_replication_degrees(
+    freqs: Sequence[float],
+    *,
+    gain_scale: float,
+    cost_per_replica: float,
+    max_extra: int,
+    max_degree: Optional[int] = None,
+) -> Tuple[int, ...]:
+    """Per-expert replica degrees SEARCHED against prefetch bandwidth.
+
+    Extends the water-filling above from "spend a fixed operator budget"
+    to "spend while it pays": each candidate grant still goes to the
+    bottleneck expert (highest per-replica load f_e / r_e), but it is
+    only accepted while the decode-time gain it buys exceeds the
+    bandwidth cost of keeping one more replica slot fresh.
+
+    ``gain_scale`` prices bottleneck load in seconds: the busiest EP
+    device's expert time is ~ t_expert_uniform * E * max_e(f_e / r_e),
+    so a grant that drops the max load by Δ is worth gain_scale * Δ
+    seconds per decode step (gain_scale = t_expert * n_experts, from
+    ``latency.InferenceSimulator``). ``cost_per_replica`` is the
+    amortized per-step prefetch-bandwidth seconds of re-pulling one
+    extra expert's weights every rebalance window
+    (``InferenceSimulator.prefetch_time``).
+
+    Under uniform routing the first grant lowers nothing (every other
+    expert still carries the old max) so the search grants zero replicas
+    — degrees deviate from all-ones only on genuinely skewed workloads,
+    which is exactly the "searched, not operator default" behavior the
+    planner needs. Marginal gains are non-increasing along the
+    water-filling path, so the greedy stop rule is optimal.
+    """
+    f = np.maximum(np.asarray(freqs, np.float64), 0.0)
+    n = f.size
+    if n == 0:
+        return ()
+    if f.sum() <= 0:
+        f = np.ones(n)
+    f = f / f.sum()
+    degrees = np.ones(n, dtype=np.int64)
+    for _ in range(max(int(max_extra), 0)):
+        load = f / degrees
+        grantable = load.copy()
+        if max_degree is not None:
+            grantable[degrees >= max_degree] = -1.0
+        e = int(np.argmax(grantable))
+        if grantable[e] < 0:
+            break
+        # the true bottleneck after this grant (a capped hotter expert
+        # keeps the max where it is — the grant then buys nothing)
+        new_max = max(
+            float(np.max(np.delete(load, e))) if n > 1 else 0.0,
+            f[e] / (degrees[e] + 1),
+        )
+        gain = gain_scale * (float(load.max()) - new_max)
+        if gain <= cost_per_replica:
+            break
+        degrees[e] += 1
+    return tuple(int(d) for d in degrees)

@@ -300,6 +300,51 @@ class InferenceSimulator:
         # which is what the ILP's relative comparisons need.
         return len(degrees) / float(sum(degrees))
 
+    def prefetch_time(self, w: Workload, *, window_steps: int = 1) -> float:
+        """Amortized per-decode-step bandwidth cost of keeping ONE extra
+        replica slot fresh through predictive prefetch (DESIGN.md §5c).
+
+        A granted replica slot is one more expert whose weights the
+        engine re-pulls (INT4 wire format — nibbles plus per-group
+        scale/zero) every rebalance window; the pull shares the
+        host-device link with the predictive prefetch of next-layer
+        experts, so its bandwidth is the price replication pays. The
+        one-expert pull time (rho comm model over the INT4 bytes)
+        divided by the ``window_steps`` decode steps it amortizes over
+        is the per-step term the degree search weighs against the
+        bottleneck-load gain.
+        """
+        if not self.cfg.is_moe:
+            return 0.0
+        from .transition import INT4_BYTES_PER_PARAM
+        wb = flops_mod.expert_weight_bytes(self.cfg, w.dtype_bytes)
+        per_expert_params = (wb / w.dtype_bytes) / self.cfg.n_routed_experts
+        v = per_expert_params * INT4_BYTES_PER_PARAM
+        if v <= 0:
+            return 0.0
+        t = float(self.model.predict_comm([v])[0])
+        return t / max(int(window_steps), 1)
+
+    def replication_search(self, w: Workload, e: ExpertStrategy,
+                           freqs, *, max_extra: int,
+                           max_degree: Optional[int] = None,
+                           window_steps: int = 64) -> tuple:
+        """Search per-expert replica degrees: decode-time gain priced by
+        ``expert_time`` against the prefetch-bandwidth cost of each
+        extra slot (``prefetch_time``). ``max_extra`` is the operator
+        knob demoted to a CAP — the search decides how much of it
+        actually pays on this workload (uniform routing grants zero).
+        """
+        from .ilp import searched_replication_degrees
+        t_exp = self.expert_time(w, "decode", e)
+        return searched_replication_degrees(
+            freqs,
+            gain_scale=t_exp * self.cfg.n_routed_experts,
+            cost_per_replica=self.prefetch_time(w, window_steps=window_steps),
+            max_extra=max_extra,
+            max_degree=max_degree,
+        )
+
     def comm_time(self, w: Workload, phase: str, a: AttnStrategy,
                   e: ExpertStrategy, pipeline_chunks: int = 1) -> float:
         """Per-layer comm time; ``pipeline_chunks`` > 1 applies the EP

@@ -200,6 +200,112 @@ class TransitionExecutor:
         return QuantizedExpert(packed=put(qt.packed), scales=put(qt.scales),
                                zeros=put(qt.zeros))
 
+    # -- predictive per-expert prefetch (DESIGN.md §5c) --------------------
+    def prefetch_rows_of(self, name: str) -> Optional[int]:
+        """Number of (layer, expert) prefetch rows backup ``name`` can be
+        restored in, or None when per-row restore cannot reproduce the
+        full restore bit-exactly.
+
+        A "row" is one index of the flattened leading (L, E) dims. Dense
+        wire-format backups flat-group the whole leaf, so rows slice on
+        group boundaries only when the per-row span is a whole number of
+        quantization groups; structured (last-dim-grouped) backups keep
+        the leading dims and always slice exactly.
+        """
+        qt = self._backups.get(name)
+        if qt is None or len(qt.shape) < 3:
+            return None
+        n_rows = qt.shape[0] * qt.shape[1]
+        if qt.packed.ndim >= 3:        # structured residency layout
+            return n_rows
+        span = int(np.prod(qt.shape[2:]))
+        if span % qt.group_size:
+            return None
+        return n_rows
+
+    def prefetch_row(self, name: str, row: int):
+        """Restore ONE leading (layer*expert) row of backup ``name`` on
+        the caller's thread — the unit of work the engine's prefetch
+        hides behind decode compute. Dense backups dequantize the row's
+        groups (bit-identical to the same row of a full ``restore``);
+        structured backups return the row's packed/scales/zeros host
+        slices. Returns a host value for the staging buffer.
+        """
+        qt = self._backups[name]
+        if qt.packed.ndim >= 3:
+            lead, e = divmod(row, qt.shape[1])
+            return (np.ascontiguousarray(qt.packed[lead, e]),
+                    np.ascontiguousarray(qt.scales[lead, e]),
+                    np.ascontiguousarray(qt.zeros[lead, e]))
+        span = int(np.prod(qt.shape[2:]))
+        gpr = span // qt.group_size    # groups per row
+        sub = dataclasses.replace(
+            qt,
+            packed=qt.packed[row * gpr:(row + 1) * gpr],
+            scales=qt.scales[row * gpr:(row + 1) * gpr],
+            zeros=qt.zeros[row * gpr:(row + 1) * gpr],
+            shape=tuple(qt.shape[2:]))
+        return self._q.dequantize_int4(sub)
+
+    def restore_with_rows(self, name: str, staged: Dict[int, object],
+                          sharding=None, dtype=None):
+        """``restore``, but rows present in ``staged`` (prefetched host
+        values from ``prefetch_row``) skip their dequant — only the
+        missed rows pay host work at the barrier. Bit-identical to a
+        plain ``restore``: per-row dequant slices the same group table,
+        and the dtype cast happens once on the assembled leaf."""
+        import jax
+        import jax.numpy as jnp
+        qt = self._backups[name]
+        n_rows = self.prefetch_rows_of(name)
+        if n_rows is None:
+            return self.restore(name, sharding, dtype)
+        row_shape = tuple(qt.shape[2:])
+        host = np.empty((n_rows,) + row_shape, np.float32)
+        for r in range(n_rows):
+            got = staged.get(r)
+            host[r] = got if got is not None else self.prefetch_row(name, r)
+        arr = jnp.asarray(host.reshape(qt.shape), dtype=dtype or jnp.bfloat16)
+        if sharding is not None:
+            arr = jax.device_put(arr, sharding)
+        return arr
+
+    def restore_packed_with_rows(self, name: str, staged: Dict[int, object],
+                                 sharding=None):
+        """``restore_packed`` from prefetched row leaves: staged rows'
+        packed/scales/zeros host slices (plus freshly sliced missed
+        rows) are stacked back into the full leading-(L, E) leaves —
+        values identical to uploading the whole backup at once."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import QuantizedExpert
+
+        qt = self._backups[name]
+        if qt.packed.ndim < 3:
+            raise ValueError(
+                f"backup {name!r} is flat; use backup_packed for residency")
+        L, E = qt.shape[0], qt.shape[1]
+        leaves = []
+        for full in (qt.packed, qt.scales, qt.zeros):
+            leaves.append(np.empty_like(full))
+        for r in range(L * E):
+            lead, e = divmod(r, E)
+            got = staged.get(r)
+            if got is None:
+                got = (qt.packed[lead, e], qt.scales[lead, e],
+                       qt.zeros[lead, e])
+            for leaf, val in zip(leaves, got):
+                leaf[lead, e] = val
+
+        def put(a):
+            arr = jnp.asarray(a)
+            return jax.device_put(arr, sharding) if sharding is not None \
+                else arr
+
+        return QuantizedExpert(packed=put(leaves[0]), scales=put(leaves[1]),
+                               zeros=put(leaves[2]))
+
     @staticmethod
     def reshard(w, sharding):
         import jax

@@ -43,6 +43,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+import functools
 import math
 import os
 from typing import Callable, Optional, Tuple, Union
@@ -702,6 +703,47 @@ def grouped_matmul(
     return fn(lhs, rhs)
 
 
+def a2a_ppermute(x: jax.Array, axis: str, *, split: int,
+                 concat: int) -> jax.Array:
+    """Tiled ``all_to_all`` decomposed into explicit ``ppermute`` hops.
+
+    Must be called inside a shard_map over ``axis``. Bit-identical to
+    ``lax.all_to_all(x, axis, split_axis=split, concat_axis=concat,
+    tiled=True)``: the split dim is cut into ``n`` blocks, block ``j``
+    travels to device ``j``, and received blocks land on the concat dim
+    in source-device order. Shift ``r`` moves every device's block for
+    peer ``(me + r) % n`` in one ring hop, so the monolithic exchange
+    becomes ``n - 1`` independent sends the scheduler can start as soon
+    as each slice is ready — the handle the double-buffered EP schedule
+    below interleaves with expert compute. Identity on a 1-device axis
+    (the null-mesh parity tests rely on this).
+    """
+    n = int(jax.lax.psum(1, axis))
+    if n == 1:
+        return x
+    if x.shape[split] % n:
+        raise ValueError(
+            f"split dim {x.shape[split]} not divisible by axis {axis!r} "
+            f"size {n}")
+    me = jax.lax.axis_index(axis)
+    s = x.shape[split] // n
+    c = x.shape[concat]
+    shape = list(x.shape)
+    shape[split] = s
+    shape[concat] = c * n
+    out = jnp.zeros(shape, x.dtype)
+    mine = jax.lax.dynamic_slice_in_dim(x, me * s, s, split)
+    out = jax.lax.dynamic_update_slice_in_dim(out, mine, me * c, concat)
+    for r in range(1, n):
+        send = jax.lax.dynamic_slice_in_dim(x, ((me + r) % n) * s, s, split)
+        recv = jax.lax.ppermute(send, axis,
+                                [(i, (i + r) % n) for i in range(n)])
+        # the block arriving on shift r left device (me - r) % n
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, recv, ((me - r) % n) * c, concat)
+    return out
+
+
 def pipelined_ep_ffn(buf: jax.Array, ffn: Callable[[jax.Array], jax.Array],
                      *, ep_axis: str, chunks: int) -> jax.Array:
     """Micro-batch-pipelined EP exchange + expert FFN (the EPS-MoE
@@ -710,30 +752,40 @@ def pipelined_ep_ffn(buf: jax.Array, ffn: Callable[[jax.Array], jax.Array],
     ``buf`` is this device's (S, C, d) dispatch buffer; ``ffn`` maps an
     exchanged (S/ep, c*ep, d) slab to its expert outputs. The capacity
     dim is split into ``chunks`` slabs, each running the same
-    dispatch-all2all -> FFN -> combine-all2all chain as the serial path
-    — but the slabs carry no data dependence on one another, so slab
-    i+1's dispatch ``all_to_all`` issues while slab i's FFN occupies the
-    compute units and slab i's combine exchange overlaps slab i+1's FFN
-    (double-buffering falls out of the dependence structure; XLA's async
-    collectives do the buffering). Token-exact with the serial path:
-    routing and capacity assignment happened *before* the split, the
-    FFN is row-independent, and the concat restores the capacity order.
+    dispatch-a2a -> FFN -> combine-a2a chain as the serial path. The
+    exchanges are the ``a2a_ppermute`` decomposition above and the
+    schedule is explicitly double-buffered: slab i+1's dispatch hops are
+    issued BEFORE slab i's FFN in program order, so while slab i
+    occupies the compute units slab i+1 is already in flight on the
+    interconnect (and slab i's combine overlaps slab i+1's FFN) — the
+    overlap exists by construction instead of relying on XLA's
+    latency-hiding scheduler to find it across a monolithic all_to_all.
+    Token-exact with the serial path: routing and capacity assignment
+    happened *before* the split, the FFN is row-independent, and the
+    concat restores the capacity order.
     """
     K = min(max(int(chunks), 1), buf.shape[1])
 
-    def exchange(x, split, concat):
-        return jax.lax.all_to_all(x, ep_axis, split_axis=split,
-                                  concat_axis=concat, tiled=True)
-
     if K <= 1:
         _record("moe.ep_serial")
-        return exchange(ffn(exchange(buf, 0, 1)), 1, 0)
+        ex = functools.partial(jax.lax.all_to_all, axis_name=ep_axis,
+                               tiled=True)
+        return ex(ffn(ex(buf, split_axis=0, concat_axis=1)),
+                  split_axis=1, concat_axis=0)
     _record(f"moe.ep_pipeline_k{K}")
+    if int(jax.lax.psum(1, ep_axis)) > 1:
+        _record("moe.ep_a2a_ppermute")
     # near-equal slabs; capacity need not divide K (first slabs one wider)
     bounds = [(i * buf.shape[1]) // K for i in range(K + 1)]
     slabs = [buf[:, bounds[i]:bounds[i + 1]] for i in range(K)]
-    sent = [exchange(s, 0, 1) for s in slabs]
-    outs = [exchange(ffn(s), 1, 0) for s in sent]
+    outs = []
+    inflight = a2a_ppermute(slabs[0], ep_axis, split=0, concat=1)
+    for i in range(K):
+        # double-buffer: issue slab i+1's dispatch before slab i's FFN
+        upnext = (a2a_ppermute(slabs[i + 1], ep_axis, split=0, concat=1)
+                  if i + 1 < K else None)
+        outs.append(a2a_ppermute(ffn(inflight), ep_axis, split=1, concat=0))
+        inflight = upnext
     return jnp.concatenate(outs, axis=1)
 
 

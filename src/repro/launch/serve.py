@@ -94,6 +94,17 @@ def main() -> None:
                          "Eq.-6 transition path")
     ap.add_argument("--rebalance-interval", type=int, default=32,
                     help="decode steps between replication re-plans")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="predictive expert prefetch: pull the predicted "
+                         "next batch of expert weights (per-(layer,expert) "
+                         "INT4 restore rows) on the background worker "
+                         "during decode windows, so restore barriers "
+                         "consume staged rows instead of paying the full "
+                         "host dequant (DESIGN.md §5c)")
+    ap.add_argument("--prefetch-top-p", type=float, default=0.5,
+                    help="predictor mass: per layer, prefetch the smallest "
+                         "set of experts covering this predicted routing "
+                         "probability")
     ap.add_argument("--moe-pipeline", type=int, default=0,
                     help="EP micro-batch pipeline depth K: the dispatch "
                          "buffer splits into K capacity chunks so each "
@@ -147,6 +158,8 @@ def main() -> None:
                             resident_int4=args.resident_int4,
                             replicate_experts=args.replicate_experts,
                             rebalance_interval=args.rebalance_interval,
+                            prefetch=args.prefetch,
+                            prefetch_top_p=args.prefetch_top_p,
                             moe_pipeline=args.moe_pipeline,
                             async_transitions=not args.no_async_transitions,
                             kernel_backend=None if args.kernel_backend == "auto"
@@ -185,6 +198,12 @@ def main() -> None:
     if args.resident_int4:
         print(f"resident INT4 experts: "
               f"{st.resident_bytes_saved / 2**20:.2f} MiB residency freed")
+    if args.prefetch:
+        print(f"expert prefetch: {st.prefetch_predicted} rows predicted, "
+              f"{st.prefetch_hits} hit / {st.prefetch_misses} missed at "
+              f"restore barriers, {st.prefetch_bytes / 2**20:.2f} MiB "
+              f"pulled ({st.prefetch_hidden_ms:.1f} ms hidden, "
+              f"{st.prefetch_exposed_ms:.1f} ms exposed)")
     if args.replicate_experts:
         rep = engine._replication
         print(f"expert replication: {st.replication_rebalances} rebalances "

@@ -61,6 +61,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -83,7 +84,12 @@ from repro.models import (
 from repro.sharding.specs import NULL_PLAN, ExpertReplication, quantized_pspec
 from .kv_cache import TRASH_BLOCK, BlockAllocator, BlockTable, blocks_for
 from .prefix_cache import PrefixCache
-from .replication import RoutingTracker, plan_replication, replication_summary
+from .replication import (
+    NextLayerPredictor,
+    RoutingTracker,
+    plan_replication,
+    replication_summary,
+)
 from .sampling import SamplingParams, sample
 from .scheduler import ContinuousScheduler, QueuedRequest
 
@@ -138,6 +144,13 @@ class EngineStats:
     async_restores: int = 0  # background restores kicked at decision time
     restore_wait_ms: float = 0.0  # residual barrier wait (the exposed cost)
     restore_overlap_ms: float = 0.0  # kick->barrier window hidden by prefill
+    # predictive expert prefetch (DESIGN.md §5c; zeros with it off):
+    prefetch_predicted: int = 0  # (layer, expert) rows submitted for pull
+    prefetch_hits: int = 0  # staged rows consumed at a restore barrier
+    prefetch_misses: int = 0  # rows a barrier restored synchronously
+    prefetch_bytes: int = 0  # host bytes pulled by background tasks
+    prefetch_hidden_ms: float = 0.0  # pull time spent off the critical path
+    prefetch_exposed_ms: float = 0.0  # consume-side restore time still paid
 
 
 @dataclasses.dataclass
@@ -226,6 +239,8 @@ class InferenceEngine:
         routing_ema: float = 0.9,
         moe_pipeline: int = 0,
         async_transitions: bool = True,
+        prefetch: bool = False,
+        prefetch_top_p: float = 0.5,
     ):
         self.cfg = cfg
         self.params = params
@@ -294,11 +309,38 @@ class InferenceEngine:
         if self.replicate_experts and not cfg.is_moe:
             raise ValueError("expert replication requires an MoE config")
         self.rebalance_interval = max(int(rebalance_interval), 1)
+        # predictive expert prefetch (DESIGN.md §5c): pull the predicted
+        # experts' INT4 restore rows on the background worker while the
+        # device runs decode steps, so restore barriers only pay for the
+        # missed rows. Needs the routing tracker even without replication.
+        self.prefetch = bool(prefetch)
+        if self.prefetch and not cfg.is_moe:
+            raise ValueError("prefetch requires an MoE config")
+        self.prefetch_top_p = float(prefetch_top_p)
         self._tracker: Optional[RoutingTracker] = (
             RoutingTracker(cfg.num_layers, cfg.n_routed_experts, ema=routing_ema)
-            if self.replicate_experts
+            if self.replicate_experts or self.prefetch
             else None
         )
+        self._predictor: Optional[NextLayerPredictor] = (
+            NextLayerPredictor(
+                cfg.num_layers, cfg.n_routed_experts, top_p=self.prefetch_top_p
+            )
+            if self.prefetch
+            else None
+        )
+        # staging buffer: (layer*E) row -> {leaf: prefetched host value},
+        # filled by the background worker, consumed (never torn — whole
+        # leaves only) at the next restore barrier; rows not in the
+        # current predicted window are evicted at issue time
+        self._prefetch_stage: Dict[int, Dict[str, Any]] = {}
+        self._prefetch_live: set = set()
+        self._prefetch_lock = threading.Lock()
+        # rebalance cadence is steps-since-last-rebalance, not an exact
+        # multiple of the absolute tracker step count — call paths that
+        # skip a boundary step must not starve rebalancing
+        self._last_rebalance_step = 0
+        self._last_workload: Optional[Workload] = None
         self._replication: Optional[ExpertReplication] = None
         self._fn_cache: Dict[Any, Any] = {}
         self._live: Optional[_LiveBatch] = None
@@ -521,8 +563,8 @@ class InferenceEngine:
                 # device_puts the packed pytree — dense weights never
                 # materialize on either side of the move
                 if mechanism == "int4_upload":
-                    moe[name] = self._tx.restore_packed(
-                        key, sharding=q_shardings.get(name)
+                    moe[name] = self._sync_restore_leaf(
+                        name, sharding=q_shardings.get(name)
                     )
                 elif q_shardings.get(name) is not None:
                     moe[name] = self._tx.reshard(moe[name], q_shardings[name])
@@ -530,8 +572,8 @@ class InferenceEngine:
             if mechanism == "int4_upload":
                 if key not in self._tx._backups:
                     self._tx.backup(key, moe[name])
-                moe[name] = self._tx.restore(
-                    key, sharding=shardings.get(name), dtype=moe[name].dtype
+                moe[name] = self._sync_restore_leaf(
+                    name, sharding=shardings.get(name), dtype=moe[name].dtype
                 )
             elif shardings.get(name) is not None:
                 moe[name] = self._tx.reshard(moe[name], shardings[name])
@@ -540,6 +582,34 @@ class InferenceEngine:
         layers["moe"] = moe
         self.params = dict(self.params, layers=layers)
         return (time.perf_counter() - t0) * 1e3
+
+    def _restore_leaf_with_stage(self, name: str, sharding=None, dtype=None):
+        """Restore one expert leaf from its INT4 backup, consuming any
+        prefetched rows from the staging buffer; rows the predictor
+        missed restore inline. Falls back to the plain full restore when
+        per-row slicing is not exact for this leaf (or prefetch is
+        off) — bit-identical output either way."""
+        key = f"moe/{name}"
+        n_rows = self._tx.prefetch_rows_of(key) if self.prefetch else None
+        if n_rows is None:
+            if self.resident_int4:
+                return self._tx.restore_packed(key, sharding=sharding)
+            return self._tx.restore(key, sharding=sharding, dtype=dtype)
+        staged = self._prefetch_snapshot(name, n_rows)
+        if self.resident_int4:
+            return self._tx.restore_packed_with_rows(key, staged,
+                                                     sharding=sharding)
+        return self._tx.restore_with_rows(key, staged, sharding=sharding,
+                                          dtype=dtype)
+
+    def _sync_restore_leaf(self, name: str, sharding=None, dtype=None):
+        """Barrier-path leaf restore: the time spent here is prefetch's
+        *exposed* cost (what the hidden pulls failed to cover)."""
+        t0 = time.perf_counter()
+        out = self._restore_leaf_with_stage(name, sharding, dtype)
+        if self.prefetch:
+            self.stats.prefetch_exposed_ms += (time.perf_counter() - t0) * 1e3
+        return out
 
     def _plan_mechanism(self) -> str:
         """INT4 vs reshard for the active plan's phase switch.
@@ -600,14 +670,17 @@ class InferenceEngine:
         for name in _EXPERT_LEAVES:
             key = f"moe/{name}"
             if self.resident_int4:
-                futures[name] = self._tx.restore_packed_async(
-                    key, sharding=q_shardings.get(name)
+                futures[name] = self._tx._executor().submit(
+                    self._restore_leaf_with_stage, name, q_shardings.get(name)
                 )
             else:
                 if key not in self._tx._backups:
                     self._tx.backup(key, moe[name])
-                futures[name] = self._tx.restore_async(
-                    key, sharding=shardings.get(name), dtype=moe[name].dtype
+                futures[name] = self._tx._executor().submit(
+                    self._restore_leaf_with_stage,
+                    name,
+                    shardings.get(name),
+                    moe[name].dtype,
                 )
         self._pending_restore = (phase, sharding_plan, futures, time.perf_counter())
         self.stats.async_restores += 1
@@ -681,26 +754,130 @@ class InferenceEngine:
     def _observe_routing(self, cache):
         """Feed a decode step's router top-k block into the frequency
         tracker and strip it from the cache (host-side consumption
-        only — it must not ride into the next step's input pytree)."""
+        only — it must not ride into the next step's input pytree).
+        With prefetch on, this is also where predicted-next-layer pulls
+        are issued: the decode step that produced this cache is still
+        executing on device (async dispatch), so the background pulls
+        run exactly in the window its slab FFNs occupy."""
         if self._tracker is None or getattr(cache, "route_topk", None) is None:
             return cache
         self._tracker.update(np.asarray(cache.route_topk))
         self.stats.routing_steps += 1
+        self._maybe_prefetch()
         return cache._replace(route_topk=None)
 
+    # -- predictive expert prefetch (DESIGN.md §5c) -----------------------
+    def _prefetch_backup_key(self) -> Optional[str]:
+        """The backup leaf prefetch slices, when per-row restore is
+        exact for every expert leaf (row spans must land on INT4 group
+        boundaries); None disables prefetch for this engine."""
+        keys = [f"moe/{n}" for n in _EXPERT_LEAVES]
+        if any(self._tx.prefetch_rows_of(k) is None for k in keys):
+            return None
+        return keys[0]
+
+    def _maybe_prefetch(self) -> None:
+        """Issue background pulls for the predicted experts' restore
+        rows. Runs on the engine thread right after a decode step was
+        dispatched; the pulls (host dequant of dense INT4 backups, or
+        packed-leaf slices under residency) execute on the
+        TransitionExecutor worker while the device computes — the same
+        single worker the async restore uses, so pulls and restores
+        stay ordered and a consume barrier sees every pull queued
+        before it. Mispredicted / unpredicted rows simply stay
+        unstaged: the barrier restores them synchronously, token-exact
+        by construction (the stage only ever holds bit-exact copies of
+        backup rows)."""
+        if self._predictor is None or self._tracker is None:
+            return
+        if self._prefetch_backup_key() is None:
+            return
+        self._predictor.observe(self._tracker)
+        pred = self._predictor.predict()
+        E = self.cfg.n_routed_experts
+        rows = {
+            layer * E + e
+            for layer, experts in enumerate(pred)
+            for e in experts
+        }
+        n_rows = self._tx.prefetch_rows_of(f"moe/{_EXPERT_LEAVES[0]}")
+        rows = {r for r in rows if r < n_rows}
+        with self._prefetch_lock:
+            # bounded window: evict stale rows the predictor dropped
+            for r in [r for r in self._prefetch_stage if r not in rows]:
+                del self._prefetch_stage[r]
+            fresh = sorted(
+                rows - set(self._prefetch_stage) - self._prefetch_live
+            )
+            self._prefetch_live.update(fresh)
+        if not fresh:
+            return
+        self.stats.prefetch_predicted += len(fresh)
+        self._tx._executor().submit(self._prefetch_pull, tuple(fresh))
+
+    def _prefetch_pull(self, rows) -> None:
+        """Background worker task: restore each predicted row's leaves
+        into the staging buffer. Rows land atomically (all three leaves
+        or nothing), so a consume snapshot can never tear an expert."""
+        for row in rows:
+            t0 = time.perf_counter()
+            try:
+                staged = {
+                    name: self._tx.prefetch_row(f"moe/{name}", row)
+                    for name in _EXPERT_LEAVES
+                }
+            except Exception:
+                log.exception("prefetch pull failed for row %d", row)
+                with self._prefetch_lock:
+                    self._prefetch_live.discard(row)
+                continue
+            ms = (time.perf_counter() - t0) * 1e3
+            nbytes = sum(
+                sum(a.nbytes for a in v) if isinstance(v, tuple) else v.nbytes
+                for v in staged.values()
+            )
+            with self._prefetch_lock:
+                if row in self._prefetch_live:
+                    self._prefetch_live.discard(row)
+                    self._prefetch_stage[row] = staged
+                    self.stats.prefetch_hidden_ms += ms
+                    self.stats.prefetch_bytes += int(nbytes)
+
+    def _prefetch_snapshot(self, name: str, n_rows: int) -> Dict[int, Any]:
+        """Staged host values for one leaf + hit/miss accounting for a
+        consume barrier. Counted once per restore (on the first leaf) so
+        hits/misses tally (layer, expert) rows, not row x leaf."""
+        with self._prefetch_lock:
+            snap = {r: v[name] for r, v in self._prefetch_stage.items()}
+        if name == _EXPERT_LEAVES[0]:
+            self.stats.prefetch_hits += len(snap)
+            self.stats.prefetch_misses += n_rows - len(snap)
+        return snap
+
     def _maybe_rebalance(self) -> bool:
-        """Every ``rebalance_interval`` tracked steps, re-plan the
-        replica set from the live routing frequencies. A changed set is
-        a changed ``ShardingPlan`` (fresh jit entries) and the weights
-        move through the same Eq.-6 relayout path as any plan switch —
-        replication has no bespoke side channel. Returns True when a
-        rebalance was applied (callers re-fetch their decode fn)."""
+        """Every ``rebalance_interval`` tracked steps SINCE THE LAST
+        rebalance, re-plan the replica set from the live routing
+        frequencies. (Steps-since, not ``steps % interval`` — a call
+        path that skips the exact boundary step, e.g. interleaved
+        prefill chunks advancing untracked steps, must fire on its next
+        check instead of starving until the next exact multiple.) A
+        changed set is a changed ``ShardingPlan`` (fresh jit entries)
+        and the weights move through the same Eq.-6 relayout path as
+        any plan switch — replication has no bespoke side channel.
+        Returns True when a rebalance was applied (callers re-fetch
+        their decode fn)."""
         if self._tracker is None or self._tracker.steps == 0:
             return False
-        if self._tracker.steps % self.rebalance_interval:
+        if not self.replicate_experts:
             return False
+        if self._tracker.steps - self._last_rebalance_step < self.rebalance_interval:
+            return False
+        self._last_rebalance_step = self._tracker.steps
         new = plan_replication(
-            self._tracker, self.replicate_experts, align=self._ep_size()
+            self._tracker,
+            self.replicate_experts,
+            align=self._ep_size(),
+            degrees=self._searched_degrees(),
         )
         if new.is_identity:
             new = None
@@ -723,6 +900,35 @@ class InferenceEngine:
         )
         return True
 
+    def _searched_degrees(self) -> Optional[tuple]:
+        """Planner-searched per-expert replica degrees: the latency
+        model trades each grant's bottleneck-load gain against the
+        prefetch bandwidth of keeping the slot fresh
+        (``HAPPlanner.searched_replication``), demoting
+        ``replicate_experts`` from fixed budget to cap. None (fixed
+        water-filling fallback) when the session's planner was never
+        built — fitting the latency forests costs ~1 min, which a
+        rebalance in a fixed-plan engine must not trigger."""
+        sess = self.session
+        if (
+            sess is None
+            or sess._planner is None
+            or self.hap_plan is None
+            or self._last_workload is None
+        ):
+            return None
+        try:
+            return sess.planner.searched_replication(
+                self._last_workload,
+                self.hap_plan.expert_decode,
+                self._tracker.frequencies(),
+                max_extra=self.replicate_experts,
+                window_steps=self.rebalance_interval,
+            )
+        except Exception:
+            log.exception("replication degree search failed; water-filling")
+            return None
+
     # -- adaptive re-planning --------------------------------------------
     def _activate_plan(self, batch_workload: Workload, phase: str = "prefill") -> float:
         """Fetch/reuse the bucketed plan for this batch; run the Eq.-6
@@ -736,6 +942,7 @@ class InferenceEngine:
         whose experts already sit in the decode layout moves nothing.
         """
         hits0 = self.session.hits
+        self._last_workload = batch_workload
         new = self.session.plan_for(batch_workload)
         self.stats.cache_hits += self.session.hits - hits0
         old = self.hap_plan

@@ -90,6 +90,83 @@ class RoutingTracker:
         return out
 
 
+class NextLayerPredictor:
+    """Predict each layer's hot experts from the PREVIOUS layer's
+    routing distribution pushed through the co-fire affinity matrix
+    ("Fast MoE Inference via Predictive Prefetching", PAPERS.md).
+
+    ``observe(tracker)`` refreshes an EMA-smoothed (L, E) score matrix:
+    layer 0 scores from its own frequency EMA, layer l >= 1 from
+    ``layer_frequencies()[l-1] @ row_normalized(affinity)`` — the
+    transition-probability estimate of which experts fire next given
+    what just fired. ``predict()`` returns per-layer tuples: the
+    smallest prefix of experts (score-descending, lower id breaks ties)
+    whose cumulative score reaches ``top_p``, dropping members below
+    ``min_confidence``. Cold start (no observed routing) predicts
+    nothing, so the engine issues no pulls until signal accumulates.
+    """
+
+    def __init__(self, n_layers: int, n_experts: int, *,
+                 top_p: float = 0.5, min_confidence: float = 0.02,
+                 ema: float = 0.5):
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+        if not 0.0 <= ema < 1.0:
+            raise ValueError(f"ema must be in [0, 1), got {ema}")
+        self.n_layers = n_layers
+        self.n_experts = n_experts
+        self.top_p = top_p
+        self.min_confidence = min_confidence
+        self.ema = ema
+        self.scores = np.zeros((n_layers, n_experts), np.float64)
+        self._warm = False
+
+    def observe(self, tracker: RoutingTracker) -> None:
+        """Fold the tracker's current state into the score EMA."""
+        if tracker.steps == 0:
+            return
+        lf = tracker.layer_frequencies()
+        raw = np.array(lf, np.float64)
+        row_mass = tracker.affinity.sum(axis=1, keepdims=True)
+        # zero-mass rows stay zero: no co-fire evidence, no confidence
+        trans = np.divide(tracker.affinity, np.maximum(row_mass, 1e-30),
+                          where=row_mass > 0,
+                          out=np.zeros_like(tracker.affinity))
+        for layer in range(1, self.n_layers):
+            pushed = lf[layer - 1] @ trans
+            mass = pushed.sum()
+            if mass > 0:
+                raw[layer] = pushed / mass
+        if self._warm:
+            self.scores = self.ema * self.scores + (1.0 - self.ema) * raw
+        else:
+            self.scores = raw
+            self._warm = True
+
+    def predict(self) -> tuple:
+        """Per-layer predicted expert tuples, highest confidence first.
+
+        Empty tuples until the first ``observe`` of a stepped tracker.
+        """
+        if not self._warm:
+            return tuple(() for _ in range(self.n_layers))
+        out = []
+        ids = np.arange(self.n_experts)
+        for layer in range(self.n_layers):
+            s = self.scores[layer]
+            order = np.lexsort((ids, -s))
+            picked, mass = [], 0.0
+            for e in order:
+                if s[e] < self.min_confidence:
+                    break  # score-sorted: everything after is colder
+                picked.append(int(e))
+                mass += float(s[e])
+                if mass >= self.top_p:
+                    break
+            out.append(tuple(picked))
+        return tuple(out)
+
+
 def affinity_order(tracker: RoutingTracker) -> tuple:
     """Greedy co-fire chain: start at the hottest expert, repeatedly
     append the unplaced expert with the strongest affinity to the last
@@ -122,15 +199,25 @@ def plan_replication(
     *,
     align: int = 1,
     max_degree: Optional[int] = None,
+    degrees: Optional[Sequence[int]] = None,
 ) -> ExpertReplication:
     """Frequency snapshot -> replica-aware placement.
 
     ``align`` pads the total slot count to a multiple of the EP axis
     size (extra grants keep water-filling) so the slot axis still
-    shards; ``max_degree`` caps any one expert's replicas.
+    shards; ``max_degree`` caps any one expert's replicas. When the
+    planner searched per-expert ``degrees`` (latency-model trade of
+    degree vs prefetch bandwidth, ``core.ilp.searched_replication_degrees``),
+    they override the fixed-budget water-filling — the affinity ordering
+    and align padding still apply.
     """
     freqs = tracker.frequencies()
-    degrees = list(replication_degrees(freqs, extra_replicas, max_degree))
+    if degrees is not None:
+        degrees = list(int(d) for d in degrees)
+        if len(degrees) != tracker.n_experts or any(d < 1 for d in degrees):
+            raise ValueError(f"bad searched degrees {degrees!r}")
+    else:
+        degrees = list(replication_degrees(freqs, extra_replicas, max_degree))
     while align > 1 and sum(degrees) % align:
         loads = [freqs[e] / degrees[e] for e in range(len(degrees))]
         degrees[int(np.argmax(loads))] += 1

@@ -1,0 +1,365 @@
+"""Predictive expert prefetch (DESIGN.md §5c): the affinity-driven
+next-layer predictor, per-(layer,expert)-row INT4 restore slicing, the
+planner's degree-vs-prefetch-bandwidth replication search, and the
+engine's staged-consume path — token-exact with prefetch on or off,
+because the staging buffer only ever holds bit-exact copies of backup
+rows and misses restore synchronously at the barrier.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core.hap import fixed_plan
+from repro.core.ilp import searched_replication_degrees
+from repro.core.transition import TransitionExecutor
+from repro.models import init_params
+from repro.serving import InferenceEngine, Request
+from repro.serving.replication import NextLayerPredictor, RoutingTracker
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# NextLayerPredictor
+# ---------------------------------------------------------------------------
+def _skewed_tracker():
+    """Layer-0 top-1 always expert 2, layer-1 top-1 always expert 0:
+    the (2, 0) co-fire pair dominates the affinity matrix."""
+    tr = RoutingTracker(n_layers=2, n_experts=4, ema=0.0)
+    tr.update(np.array([[[2, 1], [2, 3]], [[0, 3], [0, 1]]]))
+    return tr
+
+
+def test_predictor_cold_start_predicts_nothing():
+    pred = NextLayerPredictor(2, 4)
+    assert pred.predict() == ((), ())
+    # observing an UNSTEPPED tracker keeps the predictor cold
+    pred.observe(RoutingTracker(2, 4))
+    assert pred.predict() == ((), ())
+
+
+def test_predictor_affinity_pushforward_deterministic():
+    """Layer 1's prediction follows layer 0's distribution through the
+    co-fire matrix: expert 0 (the observed co-fire partner of the hot
+    layer-0 expert) must lead layer 1; identical trackers give
+    identical predictions."""
+    a = NextLayerPredictor(2, 4, top_p=0.5)
+    b = NextLayerPredictor(2, 4, top_p=0.5)
+    a.observe(_skewed_tracker())
+    b.observe(_skewed_tracker())
+    assert a.predict() == b.predict()
+    layer0, layer1 = a.predict()
+    assert layer0[0] == 2  # hottest layer-0 expert leads its own layer
+    assert layer1[0] == 0  # pushed through affinity, not layer-1 counts
+
+
+def test_predictor_top_p_prefix_and_ties():
+    """predict() takes the smallest score-descending prefix reaching
+    top_p, breaking score ties toward the lower expert id."""
+    pred = NextLayerPredictor(1, 4, top_p=0.6, min_confidence=0.0)
+    pred.scores = np.array([[0.25, 0.25, 0.25, 0.25]])
+    pred._warm = True
+    assert pred.predict() == ((0, 1, 2),)  # 0.75 >= 0.6 after three
+    pred.top_p = 0.5
+    assert pred.predict() == ((0, 1),)
+    pred.scores = np.array([[0.1, 0.7, 0.1, 0.1]])
+    assert pred.predict() == ((1,),)
+
+
+def test_predictor_min_confidence_floor():
+    """Experts below min_confidence never make the set, even when the
+    cumulative mass has not reached top_p."""
+    pred = NextLayerPredictor(1, 4, top_p=1.0, min_confidence=0.2)
+    pred.scores = np.array([[0.5, 0.3, 0.15, 0.05]])
+    pred._warm = True
+    assert pred.predict() == ((0, 1),)
+    pred.min_confidence = 0.0
+    assert pred.predict() == ((0, 1, 2, 3),)
+
+
+def test_predictor_ema_smoothing_and_validation():
+    pred = NextLayerPredictor(1, 2, top_p=1.0, min_confidence=0.0, ema=0.5)
+    tr = RoutingTracker(1, 2, ema=0.0)
+    tr.update(np.array([[[0, 0]]]))  # all mass on expert 0
+    pred.observe(tr)
+    np.testing.assert_allclose(pred.scores, [[1.0, 0.0]])  # first: raw
+    tr2 = RoutingTracker(1, 2, ema=0.0)
+    tr2.update(np.array([[[1, 1]]]))  # all mass on expert 1
+    pred.observe(tr2)
+    np.testing.assert_allclose(pred.scores, [[0.5, 0.5]])  # EMA fold
+    with pytest.raises(ValueError, match="top_p"):
+        NextLayerPredictor(1, 2, top_p=0.0)
+    with pytest.raises(ValueError, match="ema"):
+        NextLayerPredictor(1, 2, ema=1.0)
+
+
+# ---------------------------------------------------------------------------
+# searched replication degrees (degree vs prefetch bandwidth)
+# ---------------------------------------------------------------------------
+def test_searched_degrees_uniform_grants_nothing():
+    """Under uniform routing a grant cannot lower the max load (every
+    other expert still carries it), so the search stops at all-ones for
+    ANY positive bandwidth cost."""
+    assert searched_replication_degrees(
+        [0.25] * 4, gain_scale=1.0, cost_per_replica=1e-9, max_extra=4
+    ) == (1, 1, 1, 1)
+
+
+def test_searched_degrees_skew_grants_until_gain_fades():
+    # hot expert at 0.7: first grant drops max 0.7 -> 0.35, pays at
+    # cost 0.1; the next drop (0.35 -> ~0.233) also pays; the third
+    # (0.233 -> 0.175) does not
+    d = searched_replication_degrees(
+        [0.7, 0.1, 0.1, 0.1], gain_scale=1.0, cost_per_replica=0.1,
+        max_extra=8)
+    assert d == (3, 1, 1, 1)
+    # an exorbitant bandwidth cost blocks every grant
+    assert searched_replication_degrees(
+        [0.7, 0.1, 0.1, 0.1], gain_scale=1.0, cost_per_replica=1.0,
+        max_extra=8) == (1, 1, 1, 1)
+    # free bandwidth degenerates to budgeted water-filling
+    assert searched_replication_degrees(
+        [0.7, 0.1, 0.1, 0.1], gain_scale=1.0, cost_per_replica=0.0,
+        max_extra=2) == (3, 1, 1, 1)
+
+
+def test_searched_degrees_capped_bottleneck_blocks_gain():
+    """When max_degree pins the true bottleneck, a grant to the
+    runner-up cannot lower the max — the search must see zero gain and
+    stop, not overstate it from the capped load vector."""
+    d = searched_replication_degrees(
+        [0.8, 0.15, 0.05], gain_scale=1.0, cost_per_replica=1e-6,
+        max_extra=8, max_degree=2)
+    assert d[0] == 2  # the hot expert takes its one allowed grant
+    assert d == (2, 1, 1)  # ...and nothing else pays
+
+
+def test_searched_degrees_degenerate_inputs():
+    assert searched_replication_degrees(
+        [], gain_scale=1.0, cost_per_replica=0.0, max_extra=2) == ()
+    assert searched_replication_degrees(
+        [0.0, 0.0], gain_scale=1.0, cost_per_replica=1e-9,
+        max_extra=2) == (1, 1)  # zero snapshot -> uniform -> no grants
+
+
+def test_planner_searched_replication_end_to_end():
+    """Through the latency model: a skewed snapshot yields nontrivial
+    per-expert degrees (searched, not the operator default), a uniform
+    one stays all-ones — same planner, same cap."""
+    from repro.core.flops import Workload
+    from repro.core.hap import HAPPlanner
+    from repro.core.strategy import ExpertStrategy
+
+    cfg = reduced("deepseek-moe-16b")
+    planner = HAPPlanner(cfg, "a6000", 4)
+    w = Workload(batch=4, prompt=256, gen=32)
+    e = ExpertStrategy(tp=1, ep=4)
+    E = cfg.n_routed_experts
+    skew = np.full(E, 0.3 / (E - 1))
+    skew[0] = 0.7
+    d_skew = planner.searched_replication(w, e, skew, max_extra=4)
+    d_uni = planner.searched_replication(w, e, np.full(E, 1.0 / E),
+                                         max_extra=4)
+    assert len(d_skew) == len(d_uni) == E
+    assert d_skew[0] == max(d_skew) >= 2
+    assert d_uni == (1,) * E
+    # the prefetch-bandwidth term the search prices is real and finite
+    t = planner.sim.prefetch_time(w, window_steps=32)
+    assert 0.0 < t < planner.sim.prefetch_time(w, window_steps=1)
+
+
+# ---------------------------------------------------------------------------
+# TransitionExecutor: per-(layer,expert)-row restore
+# ---------------------------------------------------------------------------
+def test_prefetch_rows_flat_backup_group_boundaries(rng):
+    tx = TransitionExecutor(group_size=8)
+    w = jax.random.normal(rng, (2, 3, 4, 4))  # span 16 = 2 groups/row
+    tx.backup("ok", w)
+    assert tx.prefetch_rows_of("ok") == 6
+    # span 12 quantizes (total 48 % 8 == 0) but rows straddle groups
+    w2 = jax.random.normal(rng, (2, 2, 12))
+    tx.backup("ragged", w2)
+    assert tx.prefetch_rows_of("ragged") is None
+    tx.backup("flat2d", jax.random.normal(rng, (4, 8)))  # no (L, E) lead
+    assert tx.prefetch_rows_of("flat2d") is None
+    assert tx.prefetch_rows_of("missing") is None
+
+
+def test_prefetch_row_matches_full_restore_slice(rng):
+    tx = TransitionExecutor(group_size=8)
+    w = jax.random.normal(rng, (2, 3, 4, 4))
+    tx.backup("w", w)
+    full = np.asarray(tx.restore("w", dtype=w.dtype)).reshape(6, 4, 4)
+    for r in range(6):
+        np.testing.assert_array_equal(tx.prefetch_row("w", r), full[r])
+
+
+def test_restore_with_rows_bit_identical_any_coverage(rng):
+    """Staged-row restore must equal the plain restore bit-for-bit with
+    no rows staged, some staged, or all staged."""
+    tx = TransitionExecutor(group_size=8)
+    w = jax.random.normal(rng, (2, 3, 4, 4))
+    tx.backup("w", w)
+    plain = np.asarray(tx.restore("w", dtype=w.dtype))
+    stage = {r: tx.prefetch_row("w", r) for r in range(6)}
+    for staged in ({}, {1: stage[1], 4: stage[4]}, stage):
+        got = tx.restore_with_rows("w", staged, dtype=w.dtype)
+        np.testing.assert_array_equal(np.asarray(got), plain)
+
+
+def test_restore_packed_with_rows_bit_identical(rng):
+    tx = TransitionExecutor(group_size=8)
+    w = jax.random.normal(rng, (2, 3, 4, 16))
+    tx.backup_packed("w", w)
+    assert tx.prefetch_rows_of("w") == 6
+    plain = tx.restore_packed("w")
+    stage = {r: tx.prefetch_row("w", r) for r in (0, 3, 5)}
+    got = tx.restore_packed_with_rows("w", stage)
+    for leaf in ("packed", "scales", "zeros"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, leaf)),
+                                      np.asarray(getattr(plain, leaf)))
+    tx.backup("flat", w)
+    with pytest.raises(ValueError, match="flat"):
+        tx.restore_packed_with_rows("flat", {})
+
+
+# ---------------------------------------------------------------------------
+# engine: prefetch on/off token-exactness + accounting
+# ---------------------------------------------------------------------------
+def _switching_engine(cfg, params, **kw):
+    plan = fixed_plan("TP1", "TP2", "EP2", mechanism="int4_upload")
+    return InferenceEngine(cfg, params, max_batch=2, hap_plan=plan,
+                           use_int4_transition=True, **kw)
+
+
+def _serve(eng, prompts, gen=8):
+    for p in prompts:
+        eng.submit(Request(prompt=list(p), max_new_tokens=gen))
+    return [c.tokens for c in eng.run()]
+
+
+PROMPTS = ([1, 2, 3, 4], [5, 6, 7, 8, 9, 10], [2, 3, 4], [7, 8])
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_prefetch_token_exact_vs_off(moe_setup, backend):
+    """Greedy tokens must not move when prefetch turns on: staged rows
+    are bit-exact backup copies, misses restore at the barrier."""
+    cfg, params = moe_setup
+    off = _switching_engine(cfg, params, kernel_backend=backend)
+    toks_off = _serve(off, PROMPTS)
+    on = _switching_engine(cfg, params, kernel_backend=backend,
+                           prefetch=True, prefetch_top_p=0.9)
+    assert _serve(on, PROMPTS) == toks_off
+    s = on.stats
+    assert s.prefetch_predicted > 0  # the predictor did issue pulls
+    # every restore barrier accounted each (layer, expert) row once
+    n_rows = cfg.num_layers * cfg.n_routed_experts
+    assert (s.prefetch_hits + s.prefetch_misses) % n_rows == 0
+    assert s.prefetch_hits > 0  # batch-2 barriers consumed staged rows
+    assert s.prefetch_bytes > 0
+    z = off.stats
+    assert z.prefetch_predicted == z.prefetch_hits == z.prefetch_misses == 0
+
+
+def test_prefetch_token_exact_resident_int4(moe_setup):
+    cfg, params = moe_setup
+    off = _switching_engine(cfg, params, resident_int4=True)
+    on = _switching_engine(cfg, params, resident_int4=True, prefetch=True,
+                           prefetch_top_p=0.9)
+    assert _serve(on, PROMPTS) == _serve(off, PROMPTS)
+    assert on.stats.prefetch_predicted > 0
+
+
+def test_prefetch_async_restore_consumes_stage(moe_setup):
+    """Prefetch composes with the async-restore overlap: the background
+    barrier consumes staged rows through the same single worker, so
+    ordering holds and tokens stay exact."""
+    cfg, params = moe_setup
+    off = _switching_engine(cfg, params, async_transitions=True)
+    on = _switching_engine(cfg, params, async_transitions=True,
+                           prefetch=True, prefetch_top_p=0.9)
+    assert _serve(on, PROMPTS) == _serve(off, PROMPTS)
+    assert on.stats.async_restores >= 1
+    assert on.stats.prefetch_hits > 0
+
+
+def test_prefetch_cold_start_no_pulls(moe_setup):
+    """Before any routed decode step the predictor is cold: building
+    the engine and running prefill-side machinery issues no pulls."""
+    cfg, params = moe_setup
+    eng = _switching_engine(cfg, params, prefetch=True)
+    eng._maybe_prefetch()  # no routing observed yet
+    assert eng.stats.prefetch_predicted == 0
+    assert eng._prefetch_stage == {} and eng._prefetch_live == set()
+
+
+def test_prefetch_requires_moe():
+    cfg = reduced("mistral-nemo-12b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="MoE"):
+        InferenceEngine(cfg, params, prefetch=True)
+
+
+# ---------------------------------------------------------------------------
+# real EP2 mesh (subprocess: forced host devices must not leak)
+# ---------------------------------------------------------------------------
+def _run(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+
+
+@pytest.mark.slow
+def test_ep2_mesh_prefetch_token_exact():
+    """Prefetch on a 2-device EP mesh: sharded uploads consume the same
+    staged host rows; greedy tokens must match prefetch-off exactly."""
+    r = _run("""
+        import dataclasses, jax
+        from repro.configs import get_config
+        from repro.core import HAPSession
+        from repro.core.hap import fixed_plan
+        from repro.models import init_params
+        from repro.serving import Request
+
+        cfg = dataclasses.replace(get_config('deepseek-moe-16b').reduced(),
+                                  dtype='float32', capacity_factor=8.0)
+        mesh = jax.make_mesh((1, 2), ('data', 'model'))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+
+        def run(**kw):
+            session = HAPSession(
+                cfg, 'a6000', 2,
+                source=fixed_plan('TP1', 'TP2', 'EP2',
+                                  mechanism='int4_upload'),
+                mesh=mesh, prompt_bucket=16, gen_bucket=8)
+            eng = session.engine(params, cfg=cfg, max_batch=2,
+                                 use_int4_transition=True, **kw)
+            for p in ([1, 2, 3, 4, 5], list(range(2, 14)), [3, 1, 4]):
+                eng.submit(Request(prompt=p, max_new_tokens=8))
+            return eng, [c.tokens for c in eng.run()]
+
+        _, base = run()
+        eng, toks = run(prefetch=True, prefetch_top_p=0.9)
+        assert toks == base, (toks, base)
+        assert eng.stats.prefetch_predicted > 0
+        print('OK')
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr

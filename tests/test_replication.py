@@ -213,6 +213,29 @@ def test_engine_skew_triggers_exactly_one_rebalance():
     assert plain.stats.replication_rebalances == 0
 
 
+def test_rebalance_fires_after_skipped_boundary():
+    """Cadence is steps-SINCE-last-rebalance, not ``steps % interval``:
+    a call path that checks between exact multiples (e.g. interleaved
+    prefill chunks advancing untracked steps) must fire on its next
+    check instead of starving until the next aligned boundary."""
+    cfg, params = _skewed_moe_setup()
+    eng = InferenceEngine(cfg, params, max_batch=1, replicate_experts=2,
+                          rebalance_interval=4)
+    topk = np.zeros((cfg.num_layers, 2, 2), np.int64)  # all traffic to e0
+    for _ in range(5):  # PAST the interval-4 boundary, never checked at it
+        eng._tracker.update(topk)
+    assert eng._tracker.steps % eng.rebalance_interval != 0
+    assert eng._maybe_rebalance()  # modulo cadence would starve here
+    assert eng.stats.replication_rebalances == 1
+    assert eng._last_rebalance_step == 5
+    # no refire until a FULL interval accumulates from the last fire
+    eng._tracker.update(topk)
+    assert not eng._maybe_rebalance()
+    for _ in range(3):
+        eng._tracker.update(topk)
+    assert eng._maybe_rebalance() or eng._last_rebalance_step == 9
+
+
 def test_engine_no_rebalance_before_interval():
     cfg, params = _skewed_moe_setup()
     eng = InferenceEngine(cfg, params, max_batch=2, replicate_experts=2,
