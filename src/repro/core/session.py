@@ -144,6 +144,8 @@ class HAPSession:
         self._cache: Dict[WorkloadBucket, HAPPlan] = {}
         self.hits = 0
         self.misses = 0
+        self.fallbacks = 0   # solves degraded to the static fallback plan
+        self.faults = None   # optional FaultInjector (site "ilp")
 
     # -- lazy planner / source -------------------------------------------
     @property
@@ -203,12 +205,16 @@ class HAPSession:
         source = self.source   # resolve OUTSIDE the try: a malformed
         # source spec must raise, not masquerade as ILP infeasibility
         try:
+            if self.faults is not None:
+                self.faults.fire("ilp")   # injectable solve failure (§4f)
             plan = source.plan_for(b.workload(w.dtype_bytes))
-        except ValueError:
+        except Exception as e:   # infeasible OR solver crash: both degrade
             if not self.fallback:
                 raise
-            log.warning("planner infeasible for %s; falling back to "
-                        "static %s", b.describe(), self.fallback)
+            self.fallbacks += 1
+            log.warning("planner failed for %s (%s: %s); degrading to "
+                        "static %s", b.describe(), type(e).__name__, e,
+                        self.fallback)
             plan = (self.planner.tp_plan() if self.fallback == "tp"
                     else self.planner.ep_plan())
         self._cache[b] = plan

@@ -137,6 +137,13 @@ class TransitionExecutor:
         self.group_size = group_size
         self._backups: Dict[str, object] = {}
         self._pool = None
+        # optional FaultInjector (sites "restore" / "prefetch"): lets the
+        # fault suite fail or stall the background restore deterministically
+        self.faults = None
+
+    def _fire(self, site: str) -> None:
+        if self.faults is not None:
+            self.faults.fire(site)
 
     def _executor(self):
         if self._pool is None:
@@ -169,6 +176,7 @@ class TransitionExecutor:
     def restore(self, name: str, sharding=None, dtype=None):
         import jax
         import jax.numpy as jnp
+        self._fire("restore")
         qt = self._backups[name]
         host = self._q.dequantize_int4(qt)
         arr = jnp.asarray(host, dtype=dtype or jnp.bfloat16)
@@ -187,6 +195,7 @@ class TransitionExecutor:
 
         from repro.kernels.ops import QuantizedExpert
 
+        self._fire("restore")
         qt = self._backups[name]
         if qt.packed.ndim < 3:
             raise ValueError(
@@ -230,7 +239,16 @@ class TransitionExecutor:
         groups (bit-identical to the same row of a full ``restore``);
         structured backups return the row's packed/scales/zeros host
         slices. Returns a host value for the staging buffer.
+
+        The "prefetch" fault site fires here — the *background pull* —
+        only; the ``restore*_with_rows`` synchronous miss paths restore
+        rows via ``_restore_row``, so an injected pull failure degrades
+        to a barrier miss, never a barrier failure.
         """
+        self._fire("prefetch")
+        return self._restore_row(name, row)
+
+    def _restore_row(self, name: str, row: int):
         qt = self._backups[name]
         if qt.packed.ndim >= 3:
             lead, e = divmod(row, qt.shape[1])
@@ -260,11 +278,12 @@ class TransitionExecutor:
         n_rows = self.prefetch_rows_of(name)
         if n_rows is None:
             return self.restore(name, sharding, dtype)
+        self._fire("restore")
         row_shape = tuple(qt.shape[2:])
         host = np.empty((n_rows,) + row_shape, np.float32)
         for r in range(n_rows):
             got = staged.get(r)
-            host[r] = got if got is not None else self.prefetch_row(name, r)
+            host[r] = got if got is not None else self._restore_row(name, r)
         arr = jnp.asarray(host.reshape(qt.shape), dtype=dtype or jnp.bfloat16)
         if sharding is not None:
             arr = jax.device_put(arr, sharding)
@@ -281,6 +300,7 @@ class TransitionExecutor:
 
         from repro.kernels.ops import QuantizedExpert
 
+        self._fire("restore")
         qt = self._backups[name]
         if qt.packed.ndim < 3:
             raise ValueError(

@@ -71,6 +71,23 @@ def main() -> None:
                          "(0 = one chunk per prompt bucket)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="continuous: paged KV block size in tokens")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="continuous: paged KV pool size in blocks "
+                         "(0 = worst-case auto-size). Undersized pools "
+                         "raise actionable OutOfBlocks naming this flag")
+    ap.add_argument("--kv-overcommit", type=float, default=0.0,
+                    help="continuous: optimistic admission — charge only "
+                         "this fraction of the output budget at admission "
+                         "(0 = off, worst-case reservation). Overflow is "
+                         "covered by preemption-by-recompute (DESIGN.md "
+                         "§4f); outputs stay token-exact under greedy")
+    ap.add_argument("--max-preemptions", type=int, default=3,
+                    help="continuous: per-request preemption cap before a "
+                         "request stops being victim-eligible")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline in ms from submission "
+                         "(0 = none); expired requests retire with "
+                         "status='deadline' at the next step boundary")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="continuous: share prompt-prefix KV blocks "
                          "across requests (refcounted, copy-on-write; "
@@ -151,8 +168,13 @@ def main() -> None:
     params = init_params(cfg, jax.random.PRNGKey(0))
     if args.prefix_cache and not args.continuous:
         ap.error("--prefix-cache requires --continuous (paged serving)")
+    if args.kv_overcommit and not args.continuous:
+        ap.error("--kv-overcommit requires --continuous (paged serving)")
     engine = session.engine(params, cfg=cfg, max_batch=args.batch,
                             kv_block_size=args.kv_block_size,
+                            kv_blocks=args.kv_blocks or None,
+                            kv_overcommit=args.kv_overcommit or None,
+                            max_preemptions=args.max_preemptions,
                             prefill_chunk=args.prefill_chunk or None,
                             prefix_cache=args.prefix_cache,
                             resident_int4=args.resident_int4,
@@ -171,7 +193,8 @@ def main() -> None:
         lo = max(1, (hi - 1) // args.prompt_bucket * args.prompt_bucket + 1)
         n = int(rng.integers(lo, hi + 1))
         engine.submit(Request(prompt=rng.integers(
-            1, cfg.vocab_size, n).tolist(), max_new_tokens=args.gen))
+            1, cfg.vocab_size, n).tolist(), max_new_tokens=args.gen,
+            deadline_ms=args.deadline_ms or None))
     done = engine.serve_continuous() if args.continuous else engine.run()
     total_tok = sum(len(c.tokens) for c in done)
     st = engine.stats
@@ -188,6 +211,20 @@ def main() -> None:
     else:
         print(f"served {len(done)} requests, {total_tok} tokens in "
               f"{st.batches} batches")
+    if args.kv_overcommit:
+        print(f"optimistic admission: {st.preemptions} preemptions "
+              f"({st.preempted_tokens} tokens recomputed, "
+              f"{st.prefix_evictions_on_pressure} prefix evictions under "
+              f"pressure)")
+    terminal = st.cancelled + st.deadline_expired
+    if terminal:
+        print(f"lifecycle: {st.cancelled} cancelled, "
+              f"{st.deadline_expired} deadline-expired")
+    if st.background_errors or st.planner_fallbacks:
+        print(f"degraded paths: {st.background_errors} background errors "
+              f"({st.prefetch_errors} prefetch, {st.restore_errors} "
+              f"restore, {st.replication_search_errors} replication "
+              f"search), {st.planner_fallbacks} planner fallbacks")
     print(f"plan changes: {st.replans} (strategy switches "
           f"{st.plan_switches}, cache hits {st.cache_hits}), "
           f"transition total {st.transition_ms_total:.1f} ms")

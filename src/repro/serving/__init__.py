@@ -5,6 +5,7 @@ from .engine import (  # noqa: F401
     Request,
     engine_from_hap,
 )
+from .faults import FaultError, FaultInjector  # noqa: F401
 from .kv_cache import (  # noqa: F401
     BlockAllocator,
     BlockTable,

@@ -82,7 +82,8 @@ from repro.models import (
     prefill,
 )
 from repro.sharding.specs import NULL_PLAN, ExpertReplication, quantized_pspec
-from .kv_cache import TRASH_BLOCK, BlockAllocator, BlockTable, blocks_for
+from .faults import FaultInjector
+from .kv_cache import TRASH_BLOCK, BlockAllocator, BlockTable, OutOfBlocks, blocks_for
 from .prefix_cache import PrefixCache
 from .replication import (
     NextLayerPredictor,
@@ -103,6 +104,10 @@ class Request:
     prompt: Sequence[int]
     max_new_tokens: int = 32
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    # wall-clock budget (ms from submission) for the continuous loop: an
+    # expired request retires with status "deadline" at the next step
+    # boundary instead of occupying a slot forever. None = no deadline.
+    deadline_ms: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -112,6 +117,11 @@ class Completion:
     prefill_ms: float
     decode_ms: float
     transition_ms: float
+    # terminal status: "ok" (EOS / budget), "cancelled" (engine.cancel),
+    # "deadline" (deadline_ms expired). Non-ok completions carry whatever
+    # tokens were generated before the request was retired.
+    status: str = "ok"
+    preemptions: int = 0  # times this request was preempted-and-recomputed
 
 
 @dataclasses.dataclass
@@ -151,6 +161,18 @@ class EngineStats:
     prefetch_bytes: int = 0  # host bytes pulled by background tasks
     prefetch_hidden_ms: float = 0.0  # pull time spent off the critical path
     prefetch_exposed_ms: float = 0.0  # consume-side restore time still paid
+    # request lifecycle + robustness (DESIGN.md §4f; zeros when idle):
+    preemptions: int = 0  # victims preempted to reclaim KV blocks
+    preempted_tokens: int = 0  # generated tokens stashed for replay
+    prefix_evictions_on_pressure: int = 0  # cache blocks evicted mid-stream
+    cancelled: int = 0  # requests retired via cancel()
+    deadline_expired: int = 0  # requests retired past deadline_ms
+    planner_fallbacks: int = 0  # solves degraded to the static plan
+    # background-failure propagation (silent log.exception no more):
+    background_errors: int = 0  # total background failures, all sites
+    prefetch_errors: int = 0  # _prefetch_pull rows that failed
+    restore_errors: int = 0  # async restores failed or timed out
+    replication_search_errors: int = 0  # searched-degree solves that failed
 
 
 @dataclasses.dataclass
@@ -241,6 +263,10 @@ class InferenceEngine:
         async_transitions: bool = True,
         prefetch: bool = False,
         prefetch_top_p: float = 0.5,
+        kv_overcommit: Optional[float] = None,
+        max_preemptions: int = 3,
+        restore_timeout_s: float = 30.0,
+        faults: Optional[FaultInjector] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -344,6 +370,32 @@ class InferenceEngine:
         self._replication: Optional[ExpertReplication] = None
         self._fn_cache: Dict[Any, Any] = {}
         self._live: Optional[_LiveBatch] = None
+        # -- request-lifecycle robustness (DESIGN.md §4f) -----------------
+        # optimistic admission: fraction of the output budget charged at
+        # admission (None/0 = worst-case reservation, the PR-3 default).
+        # Overcommitted pools rely on preemption-by-recompute when the
+        # optimism loses, so the paged path is required.
+        if kv_overcommit is not None and not 0.0 < kv_overcommit <= 1.0:
+            raise ValueError("kv_overcommit must be in (0, 1] or None")
+        if kv_overcommit is not None and not self.paged:
+            raise ValueError("kv_overcommit requires the paged KV path")
+        self.kv_overcommit = kv_overcommit
+        self.max_preemptions = max(int(max_preemptions), 1)
+        # watchdog on the 1-worker restore executor: a background restore
+        # that fails or stalls past this joins the barrier as a sync
+        # fallback instead of hanging transition_expert_layout
+        self.restore_timeout_s = float(restore_timeout_s)
+        # deterministic fault injection, threaded through every
+        # degradation surface (allocator / restore worker / planner)
+        self.faults = faults
+        self._tx.faults = faults
+        if session is not None and faults is not None:
+            session.faults = faults
+        # injectable monotonic clock (tests drive deadlines synthetically)
+        self.clock = time.monotonic
+        # terminal completions (cancelled / expired / zero-budget preempt)
+        # buffered here between lifecycle sweeps; drained by retire()
+        self._finished: List[Completion] = []
         if self.resident_int4 and self._expert_leaves():
             self._make_experts_resident()
 
@@ -625,13 +677,21 @@ class InferenceEngine:
 
     # -- async INT4 restore (overlap with prefill) -------------------------
     def _drop_pending_restore(self) -> None:
-        """Drain an in-flight background restore without installing it."""
+        """Drain an in-flight background restore without installing it.
+        A future that failed (or stalls past the watchdog) is recorded
+        and abandoned — the caller is about to relayout synchronously
+        anyway, so nothing depends on the dropped results."""
         if self._pending_restore is None:
             return
         _, _, futures, _ = self._pending_restore
         self._pending_restore = None
         for f in futures.values():
-            f.result()
+            try:
+                f.result(timeout=self.restore_timeout_s)
+            except Exception:
+                log.exception("dropped background restore failed")
+                self.stats.restore_errors += 1
+                self.stats.background_errors += 1
 
     def _begin_async_restore(self, phase: str = "decode") -> None:
         """Kick the INT4 expert restore for ``phase`` onto the background
@@ -700,7 +760,23 @@ class InferenceEngine:
         self._pending_restore = None
         p_phase, p_plan, futures, t_kick = pending
         t0 = time.perf_counter()
-        results = {n: f.result() for n, f in futures.items()}
+        try:
+            # watchdog: the 1-worker executor serializes restores, so a
+            # wedged or failing worker would otherwise hang the barrier —
+            # bound the total join and fail over to the sync relayout
+            deadline = t0 + self.restore_timeout_s
+            results = {
+                n: f.result(timeout=max(deadline - time.perf_counter(), 0.0))
+                for n, f in futures.items()
+            }
+        except Exception:
+            log.exception(
+                "async restore failed/timed out at the barrier; "
+                "falling back to the sync relayout"
+            )
+            self.stats.restore_errors += 1
+            self.stats.background_errors += 1
+            return None
         wait_ms = (time.perf_counter() - t0) * 1e3
         if p_phase != phase or p_plan != self._sharding_for(phase):
             log.info("async restore discarded: target layout changed in flight")
@@ -828,6 +904,8 @@ class InferenceEngine:
                 }
             except Exception:
                 log.exception("prefetch pull failed for row %d", row)
+                self.stats.prefetch_errors += 1
+                self.stats.background_errors += 1
                 with self._prefetch_lock:
                     self._prefetch_live.discard(row)
                 continue
@@ -927,6 +1005,8 @@ class InferenceEngine:
             )
         except Exception:
             log.exception("replication degree search failed; water-filling")
+            self.stats.replication_search_errors += 1
+            self.stats.background_errors += 1
             return None
 
     # -- adaptive re-planning --------------------------------------------
@@ -942,9 +1022,11 @@ class InferenceEngine:
         whose experts already sit in the decode layout moves nothing.
         """
         hits0 = self.session.hits
+        fb0 = self.session.fallbacks
         self._last_workload = batch_workload
         new = self.session.plan_for(batch_workload)
         self.stats.cache_hits += self.session.hits - hits0
+        self.stats.planner_fallbacks += self.session.fallbacks - fb0
         old = self.hap_plan
         bucket = self.session.bucket_of(batch_workload).describe()
         if old is None or not self._plan_ran:
@@ -996,7 +1078,26 @@ class InferenceEngine:
 
     # -- serving -----------------------------------------------------------
     def submit(self, req: Request) -> int:
-        return self.scheduler.submit(req.prompt, req.max_new_tokens)
+        deadline = (
+            None if req.deadline_ms is None
+            else self.clock() + req.deadline_ms / 1e3
+        )
+        return self.scheduler.submit(
+            req.prompt, req.max_new_tokens, deadline=deadline
+        )
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request by uid — queued or live. The request retires
+        with status "cancelled" (and any tokens generated so far) at the
+        next lifecycle sweep; False when the uid is unknown/finished."""
+        if self.scheduler.cancel(uid):
+            return True
+        if self._live is not None:
+            for s in self._live.slots:
+                if s is not None and s.req.uid == uid:
+                    s.req.cancelled = True
+                    return True
+        return False
 
     def run(self, sampling: Optional[SamplingParams] = None) -> List[Completion]:
         """Drain the queue; returns completions in uid order."""
@@ -1093,7 +1194,14 @@ class InferenceEngine:
         key = jax.random.PRNGKey(sampling.seed)
         out: List[Completion] = []
         while len(self.scheduler) or self._live is not None:
+            # lifecycle sweep first: cancelled/expired requests — queued
+            # or live — retire with a terminal status instead of being
+            # served (queued) or looping forever (live)
+            self._reap_lifecycle()
+            out.extend(self.retire())
             if self._live is None:
+                if not len(self.scheduler):
+                    break
                 self._begin_live_batch()
             self.admit(sampling)
             out.extend(self.retire())  # zero-token budgets end here
@@ -1104,6 +1212,7 @@ class InferenceEngine:
                 self._live = None
                 continue
             out.extend(self.retire())
+        out.extend(self.retire())  # any last terminal completions
         return sorted(out, key=lambda c: c.uid)
 
     def _begin_live_batch(self) -> None:
@@ -1131,7 +1240,7 @@ class InferenceEngine:
                 else min(sum(needs), nslots * max_blocks)
             )
             pool = max(pool, max(needs))  # the head must stay admittable
-            allocator = BlockAllocator(pool + 1, bs)
+            allocator = BlockAllocator(pool + 1, bs, faults=self.faults)
             self._live = _LiveBatch(
                 kv_capacity=max_blocks * bs,
                 slots=[None] * nslots,
@@ -1190,7 +1299,10 @@ class InferenceEngine:
                 break
             if self.paged:
                 r = self.scheduler.next_fit_blocks(
-                    live.allocator, live.kv_capacity, prefix_cache=live.prefix
+                    live.allocator,
+                    live.kv_capacity,
+                    prefix_cache=live.prefix,
+                    overcommit=self.kv_overcommit,
                 )
             else:
                 r = self.scheduler.next_fit(live.kv_capacity)
@@ -1219,13 +1331,22 @@ class InferenceEngine:
 
     def _admit_one(self, i: int, r: QueuedRequest, sampling: SamplingParams) -> None:
         live = self._live
-        slot = _Slot(req=r, start=self.scheduler.prompt_bucket(r))
+        slot = _Slot(req=r, start=self.scheduler.padded_len(r))
         live.slots[i] = slot
         self.stats.joins += 1
 
         if self.paged:
-            # reserve the worst-case block budget now (deadlock safety);
-            # blocks materialize lazily as chunks land and decode runs
+            # reserve the block budget now: worst-case by default
+            # (deadlock safety), or the *expected* need under optimistic
+            # admission (kv_overcommit) — growth past the reservation
+            # then allocates from spare blocks, and an OutOfBlocks there
+            # triggers preemption-by-recompute (DESIGN.md §4f). Blocks
+            # materialize lazily as chunks land and decode runs.
+            charge = (
+                self.scheduler.expected_kv_need(r, self.kv_overcommit)
+                if self.kv_overcommit
+                else self.scheduler.kv_need(r)
+            )
             toks, _ = self.scheduler.pad_batch([r])
             skip = 0
             if live.prefix is not None:
@@ -1233,20 +1354,23 @@ class InferenceEngine:
                 # check: nothing registers or evicts in between) and adopt
                 # the matched run — the table starts with the shared
                 # blocks, reserving only the unmatched remainder
-                ap = live.prefix.plan_admission(toks[0], self.scheduler.kv_need(r))
+                ap = live.prefix.plan_admission(toks[0], charge)
                 skip = ap.skip
                 slot.table = BlockTable(
                     live.allocator,
-                    self.scheduler.kv_need(r),
+                    charge,
                     shared_blocks=ap.adopt,
                     shared_partial=ap.adopt_partial,
+                    owner=f"uid={r.uid}",
                 )
                 self.stats.prefix_hit_blocks += len(ap.adopt)
                 self.stats.prefix_hit_tokens += skip
                 self.stats.raw_block_need += ap.raw_blocks
                 self.stats.effective_block_need += ap.reserve_blocks
             else:
-                slot.table = BlockTable(live.allocator, self.scheduler.kv_need(r))
+                slot.table = BlockTable(
+                    live.allocator, charge, owner=f"uid={r.uid}"
+                )
             chunk = self.prefill_chunk or self.scheduler.bucket
             slot.pending = [
                 toks[0, o : o + chunk] for o in range(skip, toks.shape[1], chunk)
@@ -1383,6 +1507,92 @@ class InferenceEngine:
             live.tables[i] = s.table.padded(live.max_blocks)
             s.mirrored = True
 
+    # -- preemption-by-recompute (DESIGN.md §4f) --------------------------
+    def _grow_blocks(
+        self, i: int, n_tokens: int, write_from: Optional[int] = None
+    ) -> bool:
+        """``_ensure_blocks`` with the overcommit contract: an
+        ``OutOfBlocks`` mid-growth reclaims pool space (prefix-cache
+        eviction first, then preempting a victim) and retries. Returns
+        False when row ``i`` itself was the only eligible victim and got
+        preempted — the caller must skip its step. Raises the actionable
+        ``OutOfBlocks`` when nothing can be reclaimed (every candidate at
+        the retry cap)."""
+        while True:
+            try:
+                self._ensure_blocks(i, n_tokens, write_from)
+                return True
+            except OutOfBlocks as e:
+                self._reclaim_blocks(i, e)
+                if self._live.slots[i] is None:
+                    return False  # row i was preempted to cover the pool
+
+    def _reclaim_blocks(self, i: int, err: OutOfBlocks) -> None:
+        """Free at least one pool block for row ``i``'s growth: evict a
+        cold prefix-cache entry when one exists, else preempt the
+        least-progress victim (prefer any row over ``i`` itself, fewest
+        generated tokens first, newest uid on ties, rows at the
+        ``max_preemptions`` cap ineligible)."""
+        live = self._live
+        if live.prefix is not None and live.prefix.evict(1) > 0:
+            self.stats.prefix_evictions_on_pressure += 1
+            return
+        victims = [
+            (j, s)
+            for j, s in enumerate(live.slots)
+            if s is not None
+            and not s.done
+            and s.req.preemptions < self.max_preemptions
+        ]
+        if not victims:
+            raise OutOfBlocks(
+                f"wedged: no preemptable victim (every live request is at "
+                f"the retry cap of {self.max_preemptions}); "
+                f"{live.allocator.describe()}"
+            ) from err
+        j, _ = min(
+            victims, key=lambda t: (t[0] == i, len(t[1].tokens), -t[1].req.uid)
+        )
+        self._preempt(j)
+
+    def _preempt(self, j: int) -> None:
+        """Preempt row ``j``: free its blocks, stash its generated tokens
+        and re-enqueue prompt+generated as a fresh prefill at the queue
+        head. Token-exact under greedy sampling: the recompute replays
+        the identical token row at the identical padding, and rides the
+        prefix cache when the prompt was registered. A victim whose
+        remaining budget is exhausted completes instead of requeueing."""
+        live = self._live
+        s = self._free_slot(j)
+        r = s.req
+        r.preemptions += 1
+        self.stats.preemptions += 1
+        self.stats.preempted_tokens += len(s.tokens)
+        remaining = r.max_new_tokens - len(s.tokens)
+        if s.done or remaining <= 0:
+            # defensive: a finished row should have retired already, but
+            # if preemption races a retire boundary, complete it here
+            toks = list(r.stashed) + [
+                t for t in s.tokens if t != self.eos_id or self.eos_id < 0
+            ]
+            self._finished.append(
+                Completion(
+                    r.uid, toks, s.prefill_ms, s.decode_ms, s.transition_ms,
+                    preemptions=r.preemptions,
+                )
+            )
+            log.info("preempt-complete uid=%d slot=%d", r.uid, j)
+            return
+        r.stashed = list(r.stashed) + list(s.tokens)
+        r.max_new_tokens = remaining
+        self.scheduler.requeue(r)
+        log.info(
+            "preempt uid=%d slot=%d (%d tokens stashed, %d budget left, "
+            "preemption %d/%d)",
+            r.uid, j, len(r.stashed), remaining, r.preemptions,
+            self.max_preemptions,
+        )
+
     def _prefix_group_arrays(self) -> np.ndarray:
         """The (2, nslots) prefix-group operand for the decode kernel:
         row 0 maps every slot to its group representative (itself when
@@ -1429,21 +1639,34 @@ class InferenceEngine:
         """Process the joining row's next prompt chunk; fuse it with a
         decode step over the live rows when there are any and the chunk
         is not the last (the final chunk's logits feed sampling, which
-        the fused entry does not return)."""
+        the fused entry does not return).
+
+        Block growth runs through the preemption-aware ``_grow_blocks``
+        path: any row — including the joiner itself — may be preempted
+        mid-growth to reclaim pool space, so the step re-checks what is
+        still live before touching the device."""
         live = self._live
         s = live.slots[i]
-        chunk = s.pending.pop(0)
+        chunk = s.pending[0]
         C = len(chunk)
-        final = not s.pending
-        self._ensure_blocks(i, s.filled + C, write_from=s.filled)
+        final = len(s.pending) == 1
+        if not self._grow_blocks(i, s.filled + C, write_from=s.filled):
+            return  # the joiner itself was preempted to cover the pool
+        if active and not final:
+            for j in active:
+                if live.slots[j] is None:
+                    continue
+                self._grow_blocks(
+                    j, int(live.pos[j]) + 1, write_from=int(live.pos[j])
+                )
+            active = [j for j in active if live.slots[j] is not None]
+        if live.slots[i] is None:
+            return  # growing the decode rows preempted the joiner
+        s.pending.pop(0)
         plan = self._sharding_for("decode")
         self.stats.prefill_chunks += 1
 
         if active and not final:
-            for j in active:
-                self._ensure_blocks(
-                    j, int(live.pos[j]) + 1, write_from=int(live.pos[j])
-                )
             fn = self._fused_fn(plan)
             t0 = time.perf_counter()
             logits, live.cache = fn(
@@ -1530,9 +1753,14 @@ class InferenceEngine:
         active = live.active()
         if self.paged:
             for j in active:
-                self._ensure_blocks(
+                if live.slots[j] is None:
+                    continue
+                self._grow_blocks(
                     j, int(live.pos[j]) + 1, write_from=int(live.pos[j])
                 )
+            active = [j for j in active if live.slots[j] is not None]
+            if not active:
+                return  # every decode row was preempted to cover the pool
         decode_fn = self._decode_fn(self._sharding_for("decode"))
         t0 = time.perf_counter()
         logits, live.cache = decode_fn(
@@ -1545,27 +1773,94 @@ class InferenceEngine:
         self._apply_sampled(toks, active, step_ms)
         self._maybe_rebalance()
 
+    def _free_slot(self, i: int) -> "_Slot":
+        """Release row ``i``'s resources (blocks back to the pool, mirror
+        to trash) and empty the slot; returns the old slot state."""
+        live = self._live
+        s = live.slots[i]
+        if s.table is not None:
+            s.table.free()
+            live.tables[i, :] = TRASH_BLOCK
+        s.pending = []
+        live.slots[i] = None
+        live.next_tok[i] = 0
+        return s
+
+    def _expired(self, r: QueuedRequest) -> bool:
+        return r.deadline is not None and self.clock() >= r.deadline
+
+    def _reap_lifecycle(self) -> None:
+        """Retire cancelled/expired requests — queued or live — with a
+        terminal status (the request-lifecycle contract, DESIGN.md §4f).
+        Runs at every step boundary; completions land in ``_finished``
+        and drain through ``retire()``. Partial output (stashed replay +
+        tokens generated so far) is returned, never silently dropped."""
+        for r in list(self.scheduler.queued()):
+            if not (r.cancelled or self._expired(r)):
+                continue
+            self.scheduler.remove(r)
+            status = "cancelled" if r.cancelled else "deadline"
+            self._count_terminal(status)
+            self._finished.append(
+                Completion(
+                    r.uid, list(r.stashed), 0.0, 0.0, 0.0,
+                    status=status, preemptions=r.preemptions,
+                )
+            )
+            log.info("reap queued uid=%d (%s)", r.uid, status)
+        live = self._live
+        if live is None:
+            return
+        for i, s in enumerate(live.slots):
+            if s is None or not (s.req.cancelled or self._expired(s.req)):
+                continue
+            status = "cancelled" if s.req.cancelled else "deadline"
+            self._count_terminal(status)
+            self._free_slot(i)
+            toks = list(s.req.stashed) + [
+                t for t in s.tokens if t != self.eos_id or self.eos_id < 0
+            ]
+            self._finished.append(
+                Completion(
+                    s.req.uid, toks, s.prefill_ms, s.decode_ms,
+                    s.transition_ms, status=status,
+                    preemptions=s.req.preemptions,
+                )
+            )
+            log.info(
+                "reap live uid=%d slot=%d (%s, %d tokens)",
+                s.req.uid, i, status, len(toks),
+            )
+
+    def _count_terminal(self, status: str) -> None:
+        if status == "cancelled":
+            self.stats.cancelled += 1
+        elif status == "deadline":
+            self.stats.deadline_expired += 1
+
     def retire(self) -> List[Completion]:
         """Free slots whose request hit EOS or its output budget; returns
-        their completions (paged: KV blocks go back to the free pool;
-        contiguous: the row is reused by the next join)."""
+        their completions plus any buffered terminal (cancelled/expired/
+        zero-budget) ones. Paged: KV blocks go back to the free pool;
+        contiguous: the row is reused by the next join."""
+        comps: List[Completion] = list(self._finished)
+        self._finished.clear()
         live = self._live
-        comps: List[Completion] = []
         if live is None:
             return comps
         for i, s in enumerate(live.slots):
             if s is None or not (s.done or len(s.tokens) >= s.req.max_new_tokens):
                 continue
-            toks = [t for t in s.tokens if t != self.eos_id or self.eos_id < 0]
+            toks = list(s.req.stashed) + [
+                t for t in s.tokens if t != self.eos_id or self.eos_id < 0
+            ]
             comps.append(
-                Completion(s.req.uid, toks, s.prefill_ms, s.decode_ms, s.transition_ms)
+                Completion(
+                    s.req.uid, toks, s.prefill_ms, s.decode_ms, s.transition_ms,
+                    preemptions=s.req.preemptions,
+                )
             )
-            if s.table is not None:
-                s.table.free()
-                live.tables[i, :] = TRASH_BLOCK
-            s.pending = []
-            live.slots[i] = None
-            live.next_tok[i] = 0
+            self._free_slot(i)
             log.info("retire uid=%d slot=%d (%d tokens)", s.req.uid, i, len(toks))
         return comps
 

@@ -43,7 +43,7 @@ budget.
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -81,7 +81,7 @@ class BlockAllocator:
     silently double-inserts.
     """
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, faults=None):
         if num_blocks < 2:
             raise ValueError("need at least one allocatable block + trash")
         if block_size < 1:
@@ -92,6 +92,14 @@ class BlockAllocator:
         self._free: List[int] = list(range(num_blocks - 1, TRASH_BLOCK, -1))
         self._reserved = 0
         self._ref: List[int] = [0] * num_blocks
+        # optional FaultInjector (site "kv_alloc"): lets tests force
+        # OutOfBlocks at an exact allocation index — DESIGN.md §4f
+        self.faults = faults
+        # live tables, insertion-ordered, for per-holder occupancy in
+        # OutOfBlocks diagnostics (registered at construction, dropped
+        # at free())
+        self._holders: Dict[int, "BlockTable"] = {}
+        self._next_holder = 0
 
     # -- accounting -------------------------------------------------------
     @property
@@ -118,6 +126,25 @@ class BlockAllocator:
     def refcount(self, block: int) -> int:
         """Outstanding references on ``block`` (0 = on the free list)."""
         return self._ref[block]
+
+    def describe(self) -> str:
+        """Live pool occupancy + per-holder block counts, for actionable
+        ``OutOfBlocks`` messages: who holds what, and which knob to turn."""
+        total = self.num_blocks - 1
+        in_tables: set = set()
+        for t in self._holders.values():
+            in_tables.update(t.blocks)
+        # allocated blocks no live table references — e.g. prefix-cache-only
+        cached = (total - len(self._free)) - len(in_tables)
+        holders = ", ".join(
+            f"{t.owner or 'table'}={len(t.blocks)}+{t._reserve_left}r"
+            for t in self._holders.values()
+        )
+        return (
+            f"pool {total} blocks x {self.block_size} tok "
+            f"({self.num_free} free, {self._reserved} reserved, "
+            f"{cached} cache-only); holders: {holders or 'none'}"
+        )
 
     # -- refcounting ------------------------------------------------------
     def share(self, block: int) -> int:
@@ -151,11 +178,17 @@ class BlockAllocator:
         return False
 
     # -- alloc / free (BlockTable-facing) ---------------------------------
+    _HINT = (
+        "raise the pool (--kv-blocks / InferenceEngine(kv_blocks=...)) or "
+        "let preemption reclaim it (kv_overcommit)"
+    )
+
     def _reserve(self, n_blocks: int) -> None:
         if not self.can_admit(n_blocks):
             raise OutOfBlocks(
                 f"cannot reserve {n_blocks} blocks "
-                f"({self.num_available} available of {self.num_blocks - 1})"
+                f"({self.num_available} available of {self.num_blocks - 1}); "
+                f"{self.describe()}; {self._HINT}"
             )
         self._reserved += n_blocks
 
@@ -166,6 +199,8 @@ class BlockAllocator:
     def _alloc_reserved(self) -> int:
         """Materialize one reserved block (reservation -> allocation)."""
         assert self._reserved > 0
+        if self.faults is not None:
+            self.faults.fire("kv_alloc")
         self._reserved -= 1
         b = self._free.pop()
         self._ref[b] = 1
@@ -174,10 +209,12 @@ class BlockAllocator:
     def _alloc_extra(self) -> int:
         """Allocate past a table's reservation — only from truly spare
         blocks, never from another request's reservation."""
+        if self.faults is not None:
+            self.faults.fire("kv_alloc")
         if self.num_available < 1:
             raise OutOfBlocks(
                 f"pool exhausted ({self.num_free} free, "
-                f"{self._reserved} reserved)"
+                f"{self._reserved} reserved); {self.describe()}; {self._HINT}"
             )
         b = self._free.pop()
         self._ref[b] = 1
@@ -213,8 +250,10 @@ class BlockTable:
         budget_tokens: int,
         shared_blocks: Sequence[int] = (),
         shared_partial: bool = False,
+        owner: str = "",
     ):
         self.allocator = allocator
+        self.owner = owner  # diagnostic label (e.g. "uid=3") for describe()
         self.budget_blocks = allocator.blocks_for(budget_tokens)
         if len(shared_blocks) > self.budget_blocks:
             raise ValueError("adopted more shared blocks than the token budget")
@@ -229,6 +268,9 @@ class BlockTable:
         self.blocks: List[int] = list(shared_blocks)
         self.n_shared = len(shared_blocks)
         self._freed = False
+        self._holder_id = allocator._next_holder
+        allocator._next_holder += 1
+        allocator._holders[self._holder_id] = self
 
     def __len__(self) -> int:
         return len(self.blocks)
@@ -288,6 +330,7 @@ class BlockTable:
         if self._freed:
             return
         self._freed = True
+        self.allocator._holders.pop(self._holder_id, None)
         self.allocator._free_blocks(self.blocks)
         self.allocator._release(self._reserve_left)
         self._reserve_left = 0

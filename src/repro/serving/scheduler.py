@@ -37,7 +37,17 @@ from repro.core.session import round_up
 class QueuedRequest:
     uid: int
     prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int
+    max_new_tokens: int  # REMAINING output budget (preemption shrinks it)
+    # -- request lifecycle (DESIGN.md §4f) --------------------------------
+    deadline: Optional[float] = None  # absolute monotonic seconds, or None
+    cancelled: bool = False  # user cancel; reaped at the next boundary
+    # preemption-by-recompute state: tokens already generated before this
+    # request was preempted. A re-admission replays them as extra prompt
+    # (appended after the original prompt's own padding bucket, so RoPE
+    # positions — and therefore greedy outputs — match the solo run), and
+    # the final completion re-attaches them ahead of the resumed tokens.
+    stashed: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0  # times preempted (victim-eligibility cap)
 
 
 class FifoScheduler:
@@ -50,18 +60,54 @@ class FifoScheduler:
         self._q: Deque[QueuedRequest] = deque()
         self._next_uid = 0
 
-    def submit(self, prompt: Sequence[int], max_new_tokens: int = 32) -> int:
+    def submit(
+        self,
+        prompt: Sequence[int],
+        max_new_tokens: int = 32,
+        deadline: Optional[float] = None,
+    ) -> int:
         uid = self._next_uid
         self._next_uid += 1
-        self._q.append(QueuedRequest(uid, np.asarray(prompt, np.int32), max_new_tokens))
+        self._q.append(
+            QueuedRequest(
+                uid, np.asarray(prompt, np.int32), max_new_tokens, deadline=deadline
+            )
+        )
         return uid
 
     def __len__(self) -> int:
         return len(self._q)
 
+    def requeue(self, r: QueuedRequest) -> None:
+        """Push a preempted request back at the queue head: least-progress
+        victims resume first, so admission order still tracks the original
+        service order rather than starving the recompute."""
+        self._q.appendleft(r)
+
+    def cancel(self, uid: int) -> bool:
+        """Flag a queued request cancelled (reaped at the next boundary);
+        False when ``uid`` is not in the queue."""
+        for r in self._q:
+            if r.uid == uid:
+                r.cancelled = True
+                return True
+        return False
+
+    def remove(self, r: QueuedRequest) -> None:
+        self._q.remove(r)
+
     def prompt_bucket(self, r: QueuedRequest) -> int:
         """Padded length this request's prompt lands in (>= one bucket)."""
         return round_up(max(len(r.prompt), 1), self.bucket)
+
+    def padded_len(self, r: QueuedRequest) -> int:
+        """First decode position after prefill: the prompt's own padding
+        bucket, plus any stashed (preempted-and-replayed) tokens appended
+        after it. Stashed tokens ride past the bucket boundary on purpose:
+        padding must stay exactly what the original admission used, or the
+        replayed RoPE positions (and the recompute's outputs) would drift
+        from the solo run."""
+        return self.prompt_bucket(r) + len(r.stashed)
 
     def peek(self) -> Optional[QueuedRequest]:
         """The queue head, without removing it (None when empty)."""
@@ -96,7 +142,26 @@ class FifoScheduler:
         S is always at least one bucket (empty prompts pad to a full
         bucket) and exactly ``max_len`` when the longest prompt sits on a
         bucket boundary.
+
+        A preempted request (``r.stashed`` non-empty, B=1 continuous
+        re-admission only) pads its *original* prompt to its own bucket
+        and appends the stashed tokens after the boundary — the exact
+        token row a solo run would have seen at that depth, so the
+        recompute prefill is numerically the replay it claims to be.
         """
+        if any(r.stashed for r in batch):
+            if len(batch) != 1:
+                raise ValueError(
+                    "stashed (preempted) requests re-admit one at a time"
+                )
+            r = batch[0]
+            S0 = self.prompt_bucket(r)
+            S = S0 + len(r.stashed)
+            toks = np.full((1, S), pad_id, np.int32)
+            if len(r.prompt):
+                toks[0, S0 - len(r.prompt) : S0] = r.prompt
+            toks[0, S0:] = np.asarray(r.stashed, np.int32)
+            return toks, np.asarray([len(r.prompt) + len(r.stashed)], np.int32)
         max_len = max(len(r.prompt) for r in batch)
         S = round_up(max(max_len, 1), self.bucket)
         B = len(batch)
@@ -126,8 +191,21 @@ class ContinuousScheduler(FifoScheduler):
     """
 
     def kv_need(self, r: QueuedRequest) -> int:
-        """Cache rows this request needs: padded prompt + gen budget + 1."""
-        return self.prompt_bucket(r) + max(r.max_new_tokens, 1) + 1
+        """Worst-case cache rows: padded prompt (+ stashed replay) + the
+        remaining gen budget + 1. Invariant under preemption: the replay
+        grows ``padded_len`` by exactly what it removed from the budget."""
+        return self.padded_len(r) + max(r.max_new_tokens, 1) + 1
+
+    def expected_kv_need(self, r: QueuedRequest, overcommit: float) -> int:
+        """Optimistic admission charge: the prompt is certain, but only
+        ``overcommit`` of the output budget is reserved up front — most
+        requests stop early (EOS), so worst-case reservation strands pool
+        blocks that preemption-by-recompute can instead reclaim on the
+        rare overflow. Never below one decode token, never above the
+        worst case."""
+        gen = max(r.max_new_tokens, 1)
+        expect = int(np.ceil(overcommit * gen))
+        return self.padded_len(r) + min(max(expect, 1), gen) + 1
 
     def next_fit(self, kv_capacity: int) -> Optional[QueuedRequest]:
         """Pop the queue head iff it fits ``kv_capacity``, else None."""
@@ -137,13 +215,22 @@ class ContinuousScheduler(FifoScheduler):
         return self._q.popleft()
 
     def next_fit_blocks(
-        self, allocator, max_tokens: int, prefix_cache=None
+        self, allocator, max_tokens: int, prefix_cache=None,
+        overcommit: Optional[float] = None,
     ) -> Optional[QueuedRequest]:
         """Paged admission: pop the queue head iff its worst-case KV need
         fits the block-table width (``max_tokens``) AND the allocator can
         reserve enough free blocks for it — the block-granular replacement
         for the contiguous ``next_fit`` capacity check. A head blocked on
         blocks (not width) becomes admittable as live rows retire.
+
+        ``overcommit`` (0 < f <= 1) switches the block charge to the
+        *expected* need (``expected_kv_need``): admission reserves only a
+        fraction of the output budget, so the same pool holds more
+        concurrent requests — the engine's preemption-by-recompute path
+        (DESIGN.md §4f) covers the overflow when optimism loses. The
+        *width* check stays worst-case: a request must be able to run to
+        its full budget in this generation's tables.
 
         With a ``prefix_cache`` the head is charged its *effective*
         post-sharing need: blocks covered by a verified shared-prefix
@@ -156,9 +243,13 @@ class ContinuousScheduler(FifoScheduler):
         head = self.peek()
         if head is None:
             return None
-        need = self.kv_need(head)
-        if need > max_tokens:
+        if self.kv_need(head) > max_tokens:
             return None
+        need = (
+            self.expected_kv_need(head, overcommit)
+            if overcommit
+            else self.kv_need(head)
+        )
         if prefix_cache is None:
             if not allocator.can_admit(allocator.blocks_for(need)):
                 return None

@@ -80,6 +80,9 @@ def test_async_restore_token_exact_vs_blocking(moe_setup):
     assert eng_async.stats.async_restores >= 1
     # the kick->barrier window overlapped prefill
     assert eng_async.stats.restore_overlap_ms > 0.0
+    # no background restore failed or timed out on the happy path (§4f)
+    assert eng_async.stats.restore_errors == 0
+    assert eng_async.stats.background_errors == 0
 
 
 def test_async_restore_token_exact_resident_int4(moe_setup):

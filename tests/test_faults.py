@@ -1,0 +1,588 @@
+"""Robustness: optimistic KV admission with preemption-by-recompute,
+request deadlines/cancellation, and deterministic fault injection
+(DESIGN.md §4f).
+
+Covers the FaultInjector schedules, the actionable OutOfBlocks
+diagnostics, the scheduler's optimistic-admission arithmetic (the
+kv_need invariant that makes preemption token-exact), the engine's
+preempt/deadline/cancel lifecycle against solo greedy references, the
+degraded modes (async-restore failure and stall -> sync relayout; ILP
+failure -> static plan) with counters proving each fallback fired, and
+a seeded randomized stress run asserting pool-block conservation.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced
+from repro.core import HAPSession
+from repro.core.hap import fixed_plan
+from repro.core.latency import cached_latency_model
+from repro.models import init_params
+from repro.serving import (
+    BlockAllocator,
+    BlockTable,
+    FaultError,
+    FaultInjector,
+    InferenceEngine,
+    OutOfBlocks,
+    Request,
+    SamplingParams,
+)
+from repro.serving.scheduler import ContinuousScheduler
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    # capacity_factor raised so MoE token dropping cannot couple batch
+    # rows — the precondition for token-exact solo equivalence
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _session(cfg, **kw):
+    kw.setdefault("source", fixed_plan("TP1", "TP1"))
+    return HAPSession(cfg, "a6000", 1, prompt_bucket=16, gen_bucket=8, **kw)
+
+
+def _solo(cfg, params, reqs):
+    out = {}
+    for uid, (p, g) in enumerate(reqs):
+        eng = _session(cfg).engine(params, max_batch=1)
+        eng.submit(Request(prompt=list(p), max_new_tokens=g))
+        out[uid] = eng.run()[0].tokens
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: deterministic schedules
+# ---------------------------------------------------------------------------
+def test_injector_at_fires_on_exact_index():
+    fi = FaultInjector().fail("prefetch", at=2)
+    fi.fire("prefetch")
+    fi.fire("prefetch")
+    with pytest.raises(FaultError):
+        fi.fire("prefetch")
+    fi.fire("prefetch")  # one-shot: index 3 passes
+    assert fi.calls["prefetch"] == 4 and fi.fired_at("prefetch") == 1
+
+
+def test_injector_times_fires_first_n():
+    fi = FaultInjector().fail("restore", times=2)
+    for _ in range(2):
+        with pytest.raises(FaultError):
+            fi.fire("restore")
+    fi.fire("restore")
+    assert fi.fired_at("restore") == 2 and fi.calls["restore"] == 3
+
+
+def test_injector_p_is_seeded_replayable():
+    def pattern(seed):
+        fi = FaultInjector(seed=seed).fail("ilp", p=0.5)
+        hits = []
+        for i in range(32):
+            try:
+                fi.fire("ilp")
+                hits.append(0)
+            except FaultError:
+                hits.append(1)
+        return hits
+
+    assert pattern(7) == pattern(7)  # same seed, same firing pattern
+    assert pattern(7) != pattern(8)  # and the seed actually matters
+    assert 0 < sum(pattern(7)) < 32
+
+
+def test_injector_default_exceptions_and_custom():
+    with pytest.raises(OutOfBlocks):
+        FaultInjector().fail("kv_alloc").fire("kv_alloc")
+    with pytest.raises(FaultError):
+        FaultInjector().fail("restore").fire("restore")
+    with pytest.raises(KeyError):
+        FaultInjector().fail("ilp", exc=lambda: KeyError("boom")).fire("ilp")
+
+
+def test_injector_validation():
+    fi = FaultInjector()
+    with pytest.raises(ValueError, match="unknown fault site"):
+        fi.fail("nope")
+    with pytest.raises(ValueError, match="at most one"):
+        fi.fail("ilp", at=1, times=2)
+    with pytest.raises(ValueError, match="unknown fault site"):
+        fi.fire("nope")
+
+
+def test_injector_delay_composes_with_fail():
+    fi = (
+        FaultInjector()
+        .delay("restore", 0.01, times=1)
+        .fail("restore", at=0)
+    )
+    with pytest.raises(FaultError):
+        fi.fire("restore")  # slept, then raised
+    assert fi.fired_at("restore") == 2  # both rules matched call 0
+
+
+# ---------------------------------------------------------------------------
+# allocator: actionable OutOfBlocks + exact-index injection
+# ---------------------------------------------------------------------------
+def test_reserve_failure_message_is_actionable():
+    a = BlockAllocator(7, 4)  # 6 usable
+    t = BlockTable(a, 16, owner="uid=3")  # 4 blocks reserved
+    t.ensure_tokens(8)  # 2 materialized
+    with pytest.raises(OutOfBlocks) as ei:
+        BlockTable(a, 16, owner="uid=4")
+    msg = str(ei.value)
+    assert "cannot reserve 4 blocks (2 available of 6)" in msg
+    assert "uid=3=2+2r" in msg  # per-holder: 2 blocks + 2 reserved
+    assert "--kv-blocks" in msg and "kv_overcommit" in msg
+    t.free()
+
+
+def test_alloc_extra_failure_message_is_actionable():
+    a = BlockAllocator(4, 4)  # 3 usable
+    t = BlockTable(a, 4, owner="uid=9")  # reserves 1
+    t.ensure_tokens(12)  # 3 blocks: 1 reserved + 2 extra
+    with pytest.raises(OutOfBlocks) as ei:
+        t.ensure_tokens(16)
+    msg = str(ei.value)
+    assert "pool exhausted" in msg and "uid=9=3+0r" in msg
+    assert "--kv-blocks" in msg
+
+
+def test_injected_kv_alloc_fires_at_exact_index():
+    fi = FaultInjector().fail("kv_alloc", at=2)
+    a = BlockAllocator(9, 4, faults=fi)
+    t = BlockTable(a, 32)
+    t.ensure_tokens(8)  # allocations 0, 1 pass
+    with pytest.raises(OutOfBlocks):
+        t.ensure_tokens(12)
+    t.ensure_tokens(12)  # retry succeeds — the schedule was one-shot
+    assert fi.calls["kv_alloc"] == 4 and fi.fired_at("kv_alloc") == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler: optimistic-admission arithmetic
+# ---------------------------------------------------------------------------
+def test_kv_need_invariant_under_preemption():
+    """Preemption moves tokens from the output budget to the stashed
+    replay, so the worst-case KV need never changes — a requeued head
+    always fits the same generation's width and pool floor."""
+    sch = ContinuousScheduler(max_batch=4, bucket=16)
+    sch.submit(list(range(1, 6)), max_new_tokens=8)
+    r = sch.peek()
+    need0 = sch.kv_need(r)
+    assert need0 == 16 + 8 + 1
+    r.stashed, r.max_new_tokens = [7, 7, 7], 5  # preempted after 3 tokens
+    assert sch.padded_len(r) == 19
+    assert sch.kv_need(r) == need0
+
+
+def test_expected_kv_need_bounds():
+    sch = ContinuousScheduler(max_batch=4, bucket=16)
+    sch.submit(list(range(1, 6)), max_new_tokens=8)
+    r = sch.peek()
+    assert sch.expected_kv_need(r, 0.25) == 16 + 2 + 1
+    assert sch.expected_kv_need(r, 0.001) == 16 + 1 + 1  # >= 1 decode token
+    assert sch.expected_kv_need(r, 1.0) == sch.kv_need(r)
+
+
+def test_pad_batch_stashed_replay_layout():
+    """The replay pads the original prompt at its own bucket boundary and
+    appends the stashed tokens after it — the exact token row a solo run
+    saw at that depth (RoPE positions preserved)."""
+    sch = ContinuousScheduler(max_batch=4, bucket=16)
+    sch.submit([3, 1, 4, 1, 5], max_new_tokens=8)
+    r = sch.peek()
+    r.stashed = [9, 8]
+    toks, lens = sch.pad_batch([r])
+    assert toks.shape == (1, 18) and lens.tolist() == [7]
+    assert toks[0, :11].tolist() == [0] * 11
+    assert toks[0, 11:16].tolist() == [3, 1, 4, 1, 5]
+    assert toks[0, 16:].tolist() == [9, 8]
+    sch.submit([1, 2], max_new_tokens=2)
+    with pytest.raises(ValueError, match="one at a time"):
+        sch.pad_batch([r, sch.queued()[1]])
+
+
+def test_overcommit_admits_more_requests():
+    """The same pool holds more concurrent rows under the expected-need
+    charge; the width check stays worst-case either way."""
+    def admit_all(overcommit):
+        a = BlockAllocator(11, 4)  # 10 usable
+        sch = ContinuousScheduler(max_batch=4, bucket=16)
+        for _ in range(3):
+            sch.submit(list(range(1, 6)), max_new_tokens=8)
+        n = 0
+        while True:
+            r = sch.next_fit_blocks(a, 64, overcommit=overcommit)
+            if r is None:
+                return n
+            charge = (
+                sch.expected_kv_need(r, overcommit)
+                if overcommit
+                else sch.kv_need(r)
+            )
+            BlockTable(a, charge)
+            n += 1
+
+    assert admit_all(None) == 1  # worst case: 7 of 10 blocks each
+    assert admit_all(0.25) == 2  # expected: 5 of 10 blocks each
+    # width check is unchanged: a head outgrowing the table blocks even
+    # with an optimistic pool charge
+    a = BlockAllocator(64, 4)
+    sch = ContinuousScheduler(max_batch=4, bucket=16)
+    sch.submit(list(range(1, 30)), max_new_tokens=8)
+    assert sch.next_fit_blocks(a, 24, overcommit=0.25) is None
+
+
+# ---------------------------------------------------------------------------
+# engine: preemption-by-recompute, token-exact
+# ---------------------------------------------------------------------------
+REQS = ([list(range(1, 13)), 8], [list(range(3, 12)), 8], [[5, 4, 3, 2, 1], 8])
+
+
+def test_organic_preemption_token_exact(moe_setup):
+    """An overcommitted pool admits more rows than worst-case fits; when
+    growth exhausts it, the least-progress victim is preempted and
+    recomputed — every request still completes with solo-exact greedy
+    tokens, no wedged slots."""
+    cfg, params = moe_setup
+    solo = _solo(cfg, params, REQS)
+    eng = _session(cfg).engine(
+        params, max_batch=3, kv_block_size=4, kv_blocks=10, kv_overcommit=0.25
+    )
+    for p, g in REQS:
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+    comps = eng.serve_continuous()
+    assert {c.uid: c.tokens for c in comps} == solo
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.preempted_tokens >= 1
+    assert all(c.status == "ok" for c in comps)
+    assert sum(c.preemptions for c in comps) == eng.stats.preemptions
+    assert eng._live is None  # fully drained — nothing wedged
+
+
+def test_injected_preemption_token_exact(moe_setup):
+    """A kv_alloc fault at an exact allocation index forces the same
+    preemption path with an amply-sized pool — deterministic, no real
+    memory pressure needed — and outputs stay solo-exact."""
+    cfg, params = moe_setup
+    solo = _solo(cfg, params, REQS)
+    fi = FaultInjector().fail("kv_alloc", at=9)
+    eng = _session(cfg).engine(
+        params, max_batch=3, kv_block_size=4, faults=fi
+    )
+    for p, g in REQS:
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+    comps = eng.serve_continuous()
+    assert {c.uid: c.tokens for c in comps} == solo
+    assert fi.fired_at("kv_alloc") == 1
+    assert eng.stats.preemptions == 1
+    assert all(c.status == "ok" for c in comps)
+
+
+def test_every_victim_at_cap_raises_wedged(moe_setup):
+    """When every live row has exhausted its preemption cap and the pool
+    still cannot grow, the engine raises the actionable OutOfBlocks
+    instead of looping forever."""
+    cfg, params = moe_setup
+    fi = FaultInjector().fail("kv_alloc")  # every allocation fails
+    eng = _session(cfg).engine(
+        params, max_batch=2, kv_block_size=4, faults=fi, max_preemptions=1
+    )
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    with pytest.raises(OutOfBlocks, match="wedged"):
+        eng.serve_continuous()
+    assert eng.stats.preemptions == 1  # self-preempted once, then capped
+
+
+# ---------------------------------------------------------------------------
+# engine: request lifecycle (deadlines, cancellation)
+# ---------------------------------------------------------------------------
+def test_deadline_expires_queued_request(moe_setup):
+    cfg, params = moe_setup
+    eng = _session(cfg).engine(params, max_batch=2)
+    t = [0.0]
+    eng.clock = lambda: t[0]
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4, deadline_ms=100.0))
+    uid_ok = eng.submit(Request(prompt=[4, 5, 6], max_new_tokens=4))
+    t[0] = 1.0  # past the 0.1 s deadline before serving starts
+    comps = {c.uid: c for c in eng.serve_continuous()}
+    assert comps[0].status == "deadline" and comps[0].tokens == []
+    assert comps[uid_ok].status == "ok" and len(comps[uid_ok].tokens) == 4
+    assert eng.stats.deadline_expired == 1
+
+
+def test_deadline_expires_live_request_returns_partial(moe_setup):
+    """A live row past its deadline retires at the next step boundary
+    with whatever it generated — partial output, never dropped."""
+    cfg, params = moe_setup
+    eng = _session(cfg).engine(params, max_batch=1)
+    t = [0.0]
+    eng.clock = lambda: t[0]
+    uid = eng.submit(
+        Request(prompt=[1, 2, 3], max_new_tokens=8, deadline_ms=100.0)
+    )
+    sampling = SamplingParams()
+    key = jax.random.PRNGKey(0)
+    eng._begin_live_batch()
+    eng.admit(sampling)
+    assert eng.step(sampling, key)  # prefill chunk (+ first sample)
+    assert eng.step(sampling, key)  # one decode step
+    t[0] = 1.0
+    eng._reap_lifecycle()
+    comps = eng.retire()
+    assert [c.uid for c in comps] == [uid]
+    assert comps[0].status == "deadline" and len(comps[0].tokens) >= 1
+    assert eng.stats.deadline_expired == 1
+    assert eng._live.slots[0] is None  # the slot was actually freed
+
+
+def test_cancel_queued_and_live(moe_setup):
+    cfg, params = moe_setup
+    eng = _session(cfg).engine(params, max_batch=2)
+    uid_live = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=8))
+    uid_q = eng.submit(Request(prompt=[4, 5, 6], max_new_tokens=8))
+    assert eng.cancel(uid_q)  # still queued
+    sampling = SamplingParams()
+    key = jax.random.PRNGKey(0)
+    eng._begin_live_batch()
+    eng._reap_lifecycle()
+    eng.admit(sampling)
+    assert eng.step(sampling, key)
+    assert eng.cancel(uid_live)  # now live
+    assert not eng.cancel(999)  # unknown uid
+    eng._reap_lifecycle()
+    comps = {c.uid: c for c in eng.retire()}
+    assert comps[uid_q].status == "cancelled" and comps[uid_q].tokens == []
+    assert comps[uid_live].status == "cancelled"
+    assert eng.stats.cancelled == 2
+
+
+# ---------------------------------------------------------------------------
+# engine: degraded modes with counters proving the fallback
+# ---------------------------------------------------------------------------
+def _switching_engine(cfg, params, **kw):
+    plan = fixed_plan("TP1", "TP2", "EP2", mechanism="int4_upload")
+    return InferenceEngine(
+        cfg, params, max_batch=2, hap_plan=plan, use_int4_transition=True, **kw
+    )
+
+
+def _serve(eng, prompts, gen=8):
+    for p in prompts:
+        eng.submit(Request(prompt=list(p), max_new_tokens=gen))
+    return [c.tokens for c in eng.run()]
+
+
+PROMPTS = ([1, 2, 3, 4], [5, 6, 7, 8, 9, 10])
+
+
+def test_restore_failure_falls_back_to_sync(moe_setup):
+    """An injected background-restore failure is recorded (never silent)
+    and the barrier fails over to the sync relayout — tokens unchanged."""
+    cfg, params = moe_setup
+    ref = _serve(_switching_engine(cfg, params, async_transitions=True), PROMPTS)
+    fi = FaultInjector().fail("restore", times=1)
+    eng = _switching_engine(cfg, params, async_transitions=True, faults=fi)
+    assert _serve(eng, PROMPTS) == ref
+    assert fi.fired_at("restore") == 1
+    assert eng.stats.restore_errors >= 1
+    assert eng.stats.background_errors >= 1
+    assert eng.stats.async_restores >= 1
+
+
+def test_restore_stall_trips_watchdog_falls_back(moe_setup):
+    """A background restore stalled past restore_timeout_s times out at
+    the barrier (the 1-worker executor would otherwise hang it) and the
+    sync relayout takes over — tokens unchanged, stall counted."""
+    cfg, params = moe_setup
+    ref = _serve(_switching_engine(cfg, params, async_transitions=True), PROMPTS)
+    fi = FaultInjector().delay("restore", 1.0, at=0)
+    eng = _switching_engine(
+        cfg, params, async_transitions=True, faults=fi, restore_timeout_s=0.05
+    )
+    assert _serve(eng, PROMPTS) == ref
+    assert eng.stats.restore_errors >= 1
+    assert eng.stats.background_errors >= 1
+
+
+def test_prefetch_pull_failure_counted_not_silent(moe_setup):
+    """Injected prefetch-pull failures land in the error counters; the
+    rows simply miss at the barrier (sync restore), tokens unchanged."""
+    cfg, params = moe_setup
+    ref = _serve(
+        _switching_engine(cfg, params, prefetch=True, prefetch_top_p=0.9),
+        PROMPTS,
+    )
+    fi = FaultInjector().fail("prefetch", times=3)
+    eng = _switching_engine(
+        cfg, params, prefetch=True, prefetch_top_p=0.9, faults=fi
+    )
+    assert _serve(eng, PROMPTS) == ref
+    assert fi.fired_at("prefetch") == 3
+    assert eng.stats.prefetch_errors == 3
+    assert eng.stats.background_errors >= 3
+
+
+def test_ilp_failure_degrades_to_static_session_level():
+    cfg = reduced("deepseek-moe-16b", capacity_factor=8.0)
+    s = _session(cfg, model=cached_latency_model("a6000"))
+    s.faults = FaultInjector().fail("ilp", times=1)
+    from repro.core import Workload
+
+    plan = s.plan_for(Workload(1, 8, 8))  # solve fails -> static fallback
+    assert s.fallbacks == 1
+    assert plan.describe() == s.planner.tp_plan().describe()
+    # a different bucket solves normally (schedule exhausted)
+    s.plan_for(Workload(2, 8, 8))
+    assert s.fallbacks == 1
+
+
+def test_ilp_failure_degrades_engine_still_serves(moe_setup):
+    """A planner failure mid-serve degrades to the static plan: the
+    engine keeps serving (tokens exact vs the static reference) and the
+    fallback is counted, not silent."""
+    cfg, params = moe_setup
+    reqs = REQS[:2]
+    solo = _solo(cfg, params, reqs)
+    fi = FaultInjector().fail("ilp", times=1)
+    sess = _session(cfg, model=cached_latency_model("a6000"))
+    eng = sess.engine(params, max_batch=2, faults=fi)
+    for p, g in reqs:
+        eng.submit(Request(prompt=p, max_new_tokens=g))
+    comps = eng.serve_continuous()
+    assert {c.uid: c.tokens for c in comps} == solo
+    assert fi.fired_at("ilp") == 1
+    assert sess.fallbacks == 1
+    assert eng.stats.planner_fallbacks == 1
+
+
+# ---------------------------------------------------------------------------
+# randomized stress: admit/preempt/cancel/retire under a seeded schedule
+# ---------------------------------------------------------------------------
+def test_randomized_stress_conserves_blocks_and_tokens(moe_setup):
+    """Seeded churn over an overcommitted pool: random prompts/budgets,
+    queued cancellations and an already-expired deadline. Every request
+    retires exactly once with the right terminal status, every 'ok'
+    completion is solo-exact, and every generation's allocator ends with
+    all blocks free and zero reservations (no leak, no double-free)."""
+    cfg, params = moe_setup
+    rng = np.random.default_rng(0)
+    reqs = [
+        (rng.integers(1, cfg.vocab_size, rng.integers(2, 15)).tolist(),
+         int(rng.integers(3, 9)))
+        for _ in range(6)
+    ]
+    solo = _solo(cfg, params, reqs)
+    eng = _session(cfg).engine(
+        params, max_batch=3, kv_block_size=4, kv_blocks=10, kv_overcommit=0.25
+    )
+    allocators = []
+    begin = eng._begin_live_batch
+
+    def tracking_begin():
+        begin()
+        allocators.append(eng._live.allocator)
+
+    eng._begin_live_batch = tracking_begin
+    t = [0.0]
+    eng.clock = lambda: t[0]
+    uids = [
+        eng.submit(
+            Request(
+                prompt=p,
+                max_new_tokens=g,
+                # uid 4 expires before serving begins
+                deadline_ms=(50.0 if i == 4 else None),
+            )
+        )
+        for i, (p, g) in enumerate(reqs)
+    ]
+    assert eng.cancel(uids[2])
+    t[0] = 1.0
+    comps = {c.uid: c for c in eng.serve_continuous()}
+    assert sorted(comps) == uids  # each request retired exactly once
+    assert comps[uids[2]].status == "cancelled"
+    assert comps[uids[4]].status == "deadline"
+    for uid in uids:
+        if comps[uid].status == "ok":
+            assert comps[uid].tokens == solo[uid], uid
+    assert eng.stats.cancelled == 1 and eng.stats.deadline_expired == 1
+    assert eng.stats.preemptions >= 1  # the churn actually exercised it
+    assert eng._live is None
+    assert allocators  # the tracker actually saw the generations
+    for a in allocators:
+        assert a.num_reserved == 0
+        assert a.num_free == a.num_blocks - 1  # all but the trash block
+        assert all(a.refcount(b) == 0 for b in range(1, a.num_blocks))
+
+
+# ---------------------------------------------------------------------------
+# real TP2 mesh (subprocess: forced host devices must not leak)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_tp2_mesh_preemption_token_exact():
+    """Preemption-by-recompute on a real 2-device TP mesh: the stash /
+    replay / re-admission cycle must stay token-exact vs solo runs ON
+    THE SAME MESH (psum reduction order differs from the null mesh)."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=2",
+        PYTHONPATH=os.path.join(ROOT, "src"),
+    )
+    code = textwrap.dedent("""
+        import dataclasses, jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_config
+        from repro.core import HAPSession
+        from repro.core.hap import fixed_plan
+        from repro.models import init_params
+        from repro.serving import Request
+
+        cfg = dataclasses.replace(get_config('deepseek-moe-16b').reduced(),
+                                  dtype='float32', capacity_factor=8.0)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        mesh = Mesh(np.array(jax.devices()).reshape(1, 2),
+                    ('data', 'model'))
+
+        def session():
+            return HAPSession(cfg, 'a6000', 2,
+                              source=fixed_plan('TP2', 'TP2'), mesh=mesh,
+                              prompt_bucket=16, gen_bucket=8)
+
+        reqs = [(list(range(1, 13)), 8), (list(range(3, 12)), 8),
+                ([5, 4, 3, 2, 1], 8)]
+        solo = {}
+        for uid, (p, g) in enumerate(reqs):
+            eng = session().engine(params, max_batch=1)
+            eng.submit(Request(prompt=p, max_new_tokens=g))
+            solo[uid] = eng.run()[0].tokens
+        eng = session().engine(params, max_batch=3, kv_block_size=4,
+                               kv_blocks=10, kv_overcommit=0.25)
+        for p, g in reqs:
+            eng.submit(Request(prompt=p, max_new_tokens=g))
+        got = {c.uid: c.tokens for c in eng.serve_continuous()}
+        assert got == solo, (got, solo)
+        assert eng.stats.preemptions >= 1
+        assert eng._live is None
+        print('OK')
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert "OK" in r.stdout, r.stdout + r.stderr

@@ -272,6 +272,8 @@ def test_prefetch_token_exact_vs_off(moe_setup, backend):
     assert (s.prefetch_hits + s.prefetch_misses) % n_rows == 0
     assert s.prefetch_hits > 0  # batch-2 barriers consumed staged rows
     assert s.prefetch_bytes > 0
+    # no background pull failed silently on the happy path (§4f)
+    assert s.prefetch_errors == 0 and s.background_errors == 0
     z = off.stats
     assert z.prefetch_predicted == z.prefetch_hits == z.prefetch_misses == 0
 

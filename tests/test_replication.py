@@ -211,6 +211,9 @@ def test_engine_skew_triggers_exactly_one_rebalance():
     plain = InferenceEngine(cfg, params, max_batch=2)
     assert _serve(plain, prompts, gen) == toks
     assert plain.stats.replication_rebalances == 0
+    # the replication search never failed silently on the happy path (§4f)
+    assert eng.stats.replication_search_errors == 0
+    assert eng.stats.background_errors == 0
 
 
 def test_rebalance_fires_after_skipped_boundary():
